@@ -1,0 +1,33 @@
+"""Fig. 13 analogue: ablation of the three knobs — K (kernel selection),
+C (post-transformed weight cache), P (pipelined execution) — in the
+deterministic big.LITTLE simulator fed with measured profiles."""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, csv_line, sim_numbers
+
+MODELS = ["mobilenet", "resnet18", "squeezenet"]
+
+
+def run(print_csv=True):
+    rows = []
+    for model in MODELS:
+        eng, x = build_engine(model)
+        sim = sim_numbers(eng)
+        stages = {
+            "baseline": sim.sequential_s,
+            "K": sim.kernel_only_s,
+            "KC": sim.kernel_cache_s,
+            "KCP": sim.nnv12_s,
+            "warm": sim.warm_s,
+        }
+        rows.append((model, stages))
+        if print_csv:
+            for k, v in stages.items():
+                print(csv_line(
+                    f"ablation/{model}/{k}", v,
+                    f"speedup={stages['baseline']/v:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

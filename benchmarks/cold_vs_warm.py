@@ -1,0 +1,37 @@
+"""Fig. 2 / Table 1 analogue: cold vs warm inference gap + stage breakdown.
+
+Cold here is the vanilla sequential engine (read -> transform -> execute,
+warm-best kernels) — the paper's ncnn baseline. The XLA jit compile stage is
+reported separately as the 'GPU preparation' analogue.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, csv_line, sim_numbers
+
+MODELS = ["mobilenet", "squeezenet", "resnet18"]
+
+
+def run(print_csv=True):
+    rows = []
+    for model in MODELS:
+        eng, x = build_engine(model)
+        sim = sim_numbers(eng)
+        compile_s = sum(min(p.compile_s for p in eng.profiles[l.spec.name])
+                        for l in eng.layers)
+        read_s = sum(next(iter(eng.profiles[l.spec.name])).read_raw_s
+                     for l in eng.layers)
+        gap = sim.sequential_s / sim.warm_s
+        gap_with_compile = (sim.sequential_s + compile_s) / sim.warm_s
+        rows.append((model, sim.sequential_s, sim.warm_s, gap,
+                     gap_with_compile, read_s, compile_s))
+        if print_csv:
+            print(csv_line(f"cold_vs_warm/{model}/cold", sim.sequential_s,
+                           f"gap={gap:.1f}x"))
+            print(csv_line(f"cold_vs_warm/{model}/warm", sim.warm_s))
+            print(csv_line(f"cold_vs_warm/{model}/compile_stage", compile_s,
+                           f"gap_incl_compile={gap_with_compile:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

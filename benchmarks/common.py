@@ -1,0 +1,70 @@
+"""Shared benchmark helpers.
+
+Two measurement modes everywhere (DESIGN.md §2):
+  wall — real seconds on this 1-core host (threads overlap disk I/O only);
+  sim  — deterministic event-driven makespans under the calibrated
+         big.LITTLE CoreModel (Fig. 6 factors), fed with *measured*
+         per-op profiles. The paper's multi-core claims are evaluated in
+         sim; wall numbers validate that the plumbing is real.
+"""
+from __future__ import annotations
+
+import tempfile
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.engine import ColdEngine
+from repro.core.profiler import CoreModel
+from repro.core.scheduler import simulate
+from repro.models.cnn import build_cnn
+
+CORE_MODEL = CoreModel()
+
+
+@dataclass
+class SimNumbers:
+    nnv12_s: float
+    sequential_s: float       # warm-best kernels, read->transform->exec
+    warm_s: float             # execution only (weights resident)
+    kernel_only_s: float      # +K: cold kernels, still sequential
+    kernel_cache_s: float     # +KC: cold kernels + cache, sequential
+
+
+def build_engine(model: str, *, image=40, width=0.6, n_little=3, store=None):
+    layers, x = build_cnn(model, image=image, width=width)
+    eng = ColdEngine(layers, store or tempfile.mkdtemp(prefix=f"nnv12_{model}_"))
+    eng.decide(x, n_little=n_little)
+    return eng, x
+
+
+def sim_numbers(eng: ColdEngine, n_little: int = 3) -> SimNumbers:
+    """Deterministic makespans from the measured profiles + CoreModel."""
+    cm = CORE_MODEL
+    warm = eng.warm_best_choices()
+    names = [l.spec.name for l in eng.layers]
+
+    def prof(name, kernel):
+        return next(p for p in eng.profiles[name] if p.kernel == kernel)
+
+    # sequential baseline: big-core read + transform + exec, warm kernels
+    seq = sum(prof(n, c.kernel).prep_s(False) + prof(n, c.kernel).exec_s
+              for n, c in zip(names, warm))
+    warm_s = sum(prof(n, c.kernel).exec_s for n, c in zip(names, warm))
+    # +K: scheduler's kernels (cold-optimal), sequential, no cache
+    choices = eng.plan.choices
+    k_only = sum(prof(n, c.kernel).prep_s(False) + prof(n, c.kernel).exec_s
+                 for n, c in zip(names, choices))
+    # +KC: with the cache decisions
+    kc = sum(prof(n, c.kernel).prep_s(c.use_cache) + prof(n, c.kernel).exec_s
+             for n, c in zip(names, choices))
+    return SimNumbers(
+        nnv12_s=eng.plan.est_makespan,
+        sequential_s=seq, warm_s=warm_s,
+        kernel_only_s=k_only, kernel_cache_s=kc,
+    )
+
+
+def csv_line(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds*1e6:.1f},{derived}"

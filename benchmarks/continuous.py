@@ -1,0 +1,28 @@
+"""Fig. 14 analogue: cold + subsequent warm inferences with kernel switching
+(§3.5) — wall-clock on this host."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.switching import ContinuousSession
+from benchmarks.common import build_engine, csv_line
+
+
+def run(print_csv=True, model="squeezenet"):
+    eng, x = build_engine(model)
+    warm_ref = eng.run_warm(x)
+    sess = ContinuousSession(eng, n_little=3)
+    r1 = sess.cold_infer(x)
+    r2 = sess.warm_infer(x, wait=True)   # 2nd inference (switched)
+    r3 = sess.warm_infer(x, wait=True)   # 3rd
+    rows = [("1st", r1.total_s), ("2nd", r2.total_s), ("3rd", r3.total_s),
+            ("warm_ref", warm_ref)]
+    if print_csv:
+        for k, v in rows:
+            print(csv_line(f"continuous/{model}/{k}", v,
+                           f"vs_warm={v/warm_ref:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 11 analogue: cold inference under background load on little cores,
+with and without work stealing (deterministic simulator over measured
+profiles; load = slowdown factor on the loaded cores)."""
+from __future__ import annotations
+
+from repro.core.scheduler import simulate
+from benchmarks.common import build_engine, csv_line, CORE_MODEL
+
+
+def run(print_csv=True, model="resnet18"):
+    # resnet18: deepest little-core queues (6-7 preps/core) — the regime
+    # where a busy core's *tail* delays the pipeline and stealing can move
+    # it (a running op can't migrate, matching the paper's semantics)
+    eng, x = build_engine(model, image=64, width=1.0)
+    cm = CORE_MODEL
+    names = [l.spec.name for l in eng.layers]
+
+    def prof(n, kern):
+        return next(p for p in eng.profiles[n] if p.kernel == kern)
+
+    pl, pb, ex = [], [], []
+    for n, c in zip(names, eng.plan.choices):
+        p = prof(n, c.kernel)
+        if c.use_cache:
+            pl.append(p.read_cached_s * cm.little_read)
+        else:
+            pl.append(p.read_raw_s * cm.little_read
+                      + p.transform_s * cm.little_transform)
+        pb.append(p.prep_s(c.use_cache))
+        ex.append(p.exec_s)
+
+    rows = []
+    # background load on ONE little core (paper Fig. 11 loads a subset of
+    # cores; stealing migrates its queue tail to the idle cores)
+    for label, slow in [("0%", 1.0), ("50%", 2.0), ("75%", 4.0)]:
+        load = {0: slow}
+        mk_static, _ = simulate(pl, pb, ex, eng.plan.big_prep,
+                                eng.plan.little_queues, core_load=load,
+                                work_stealing=False)
+        mk_steal, _ = simulate(pl, pb, ex, eng.plan.big_prep,
+                               eng.plan.little_queues, core_load=load,
+                               work_stealing=True)
+        rows.append((label, mk_static, mk_steal))
+        if print_csv:
+            print(csv_line(f"dynamic_load/{model}/{label}/static", mk_static))
+            print(csv_line(f"dynamic_load/{model}/{label}/stealing", mk_steal,
+                           f"recovery={mk_static/mk_steal:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

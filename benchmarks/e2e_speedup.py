@@ -1,0 +1,32 @@
+"""Fig. 8 / Table 5 analogue: end-to-end NNV12 vs sequential baseline
+speedups per model, plus the gap to warm inference (sim mode over measured
+profiles; wall numbers printed alongside for the 1-core host)."""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, csv_line, sim_numbers
+
+MODELS = ["mobilenet", "squeezenet", "resnet18", "alexnet"]
+
+
+def run(print_csv=True):
+    rows = []
+    for model in MODELS:
+        eng, x = build_engine(model)
+        sim = sim_numbers(eng)
+        wall_nnv12 = eng.run_cold(x, mode="nnv12").total_s
+        wall_seq = eng.run_cold(x, mode="sequential").total_s
+        speedup = sim.sequential_s / sim.nnv12_s
+        vs_warm = sim.nnv12_s / sim.warm_s
+        rows.append((model, sim, wall_nnv12, wall_seq))
+        if print_csv:
+            print(csv_line(f"e2e/{model}/nnv12_sim", sim.nnv12_s,
+                           f"speedup={speedup:.2f}x;vs_warm={vs_warm:.2f}x"))
+            print(csv_line(f"e2e/{model}/baseline_sim", sim.sequential_s))
+            print(csv_line(f"e2e/{model}/warm_sim", sim.warm_s))
+            print(csv_line(f"e2e/{model}/nnv12_wall", wall_nnv12,
+                           f"wall_speedup={wall_seq/wall_nnv12:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,199 @@
+"""§Perf hillclimbing: three campaigns over the most interesting
+(arch × shape) pairs, each a hypothesis -> change -> re-lower -> validate
+loop. Results + the full iteration log land in
+benchmarks/results/hillclimb.json and EXPERIMENTS.md §Perf.
+
+Pairs (selected from the §Roofline baseline table):
+  A qwen3-32b × decode_32k      — most collective-bound (full-cache
+                                   all-gathers per layer)
+  B internvl2-76b × prefill_32k — worst memory/compute roofline fraction
+                                   (online-softmax score traffic)
+  C granite-moe × train_4k      — worst useful-FLOPs ratio of the train
+                                   pairs; MoE, the paper's 'non-dense archs
+                                   matter most' case
+
+Run (after the baseline sweep):
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "hillclimb.json"
+
+
+def dominant(r):
+    return {"compute": r["compute_s"], "memory": r["memory_s"],
+            "collective": r["collective_s"]}[r["bottleneck"]]
+
+
+CAMPAIGNS = [
+    {
+        "name": "A qwen3-32b x decode_32k (collective-bound)",
+        "arch": "qwen3-32b", "shape": "decode_32k",
+        "iters": [
+            dict(label="a0 baseline (XLA-auto cache attention)",
+                 hypothesis="per-layer attention against the seq-sharded "
+                            "cache makes SPMD all-gather the full KV cache "
+                            "on every layer -> collective-dominated",
+                 flags={"decode_flash": False}),
+            dict(label="a1 shard_map flash-decoding",
+                 hypothesis="partial softmax per seq shard + (B,H,hd) psum "
+                            "combine replaces the O(L*cache) gathers; "
+                            "predict >=10x collective reduction",
+                 flags={"decode_flash": True}),
+            dict(label="a2 + serving params replicated over data",
+                 hypothesis="remaining collective is FSDP weight gathering "
+                            "- wrong trade for decode (weights are re-"
+                            "gathered every token). Replicate params over "
+                            "data (TP only): predict collective -> ~0, "
+                            "memory +weights-read (~+10ms)",
+                 flags={"decode_flash": True},
+                 strategy="serve_replicated"),
+            dict(label="a3 + int8 KV cache (lossy; per-entry scales)",
+                 hypothesis="remaining memory term is dominated by reading "
+                            "the bf16 cache (~4.3 GiB/step/device); int8 "
+                            "values + f32 per-(entry,head) scales cut cache "
+                            "bytes ~47%: predict memory term ~1.6-1.9x "
+                            "down, peak -2GiB. Logit error bounded in "
+                            "tests/test_int8_cache.py",
+                 flags={"decode_flash": True, "kv_cache_int8": True},
+                 strategy="serve_replicated"),
+        ],
+    },
+    {
+        "name": "B internvl2-76b x prefill_32k (memory-bound)",
+        "arch": "internvl2-76b", "shape": "prefill_32k",
+        "iters": [
+            dict(label="b0 baseline (chunk=1024 online softmax)",
+                 hypothesis="memory term dominated by S^2 score traffic + "
+                            "per-chunk (m,l,acc) carry sweeps",
+                 flags={"attn_chunk": 1024}),
+            dict(label="b1 chunk 1024 -> 2048",
+                 hypothesis="carry-sweep traffic scales 1/nchunks; predict "
+                            "~10-20% memory-term drop, peak VMEM x2",
+                 flags={"attn_chunk": 2048}),
+            dict(label="b2 chunk 2048 -> 4096",
+                 hypothesis="same scaling; check peak memory stays in "
+                            "budget",
+                 flags={"attn_chunk": 4096}),
+            dict(label="b3 Pallas flash-attention kernel (modeled)",
+                 hypothesis="chunk size doesn't touch the dominant term "
+                            "because the S^2 score buffers themselves are "
+                            "the traffic; the Pallas kernel "
+                            "(repro.kernels.attention, validated vs oracle "
+                            "in interpret mode) keeps them in VMEM. "
+                            "Modeled via named_scope-classified HLO "
+                            "traffic: memory term -> memory_s_flash",
+                 flags={"attn_chunk": 1024}, modeled_flash=True),
+        ],
+    },
+    {
+        "name": "C granite-moe-3b x train_4k (compute-replicated)",
+        "arch": "granite-moe-3b-a800m", "shape": "train_4k",
+        "iters": [
+            dict(label="c0 baseline (attention replicated over model)",
+                 hypothesis="24 q-heads / 8 kv-heads don't divide the "
+                            "16-way model axis, so every model shard "
+                            "computes the full attention: useful-FLOPs "
+                            "ratio 0.06",
+                 flags={"seqpar_attn": False}),
+            dict(label="c1 sequence-parallel attention (shard_map)",
+                 hypothesis="shard query-sequence over model (K/V full, "
+                            "GQA-small): per-device attention compute and "
+                            "score traffic /16; predict compute term ~5-8x "
+                            "down, memory down, small S-gather collective "
+                            "added",
+                 flags={"seqpar_attn": True}),
+            dict(label="c2 + MoE capacity factor 2.0 -> 1.25",
+                 hypothesis="expert blocks run at 2x token slack; 1.25 "
+                            "cuts grouped-GEMM compute+traffic ~37% at "
+                            "bounded drop risk (aux loss balances load)",
+                 flags={"seqpar_attn": True},
+                 cfg_overrides={"moe_capacity_factor": 1.25}),
+            dict(label="c3 + microbatches 16 -> 8",
+                 hypothesis="FSDP weight gathers happen per microbatch: "
+                            "halving microbatches halves weight-gather "
+                            "wire bytes; activation memory x2 but seqpar "
+                            "already cut the scores 16x so it fits",
+                 flags={"seqpar_attn": True},
+                 cfg_overrides={"moe_capacity_factor": 1.25},
+                 microbatches=8),
+        ],
+    },
+    {
+        "name": "D internvl2-76b x train_4k (largest absolute collective)",
+        "arch": "internvl2-76b", "shape": "train_4k",
+        "iters": [
+            dict(label="d0 baseline (16 microbatches, remat groups of 4)",
+                 hypothesis="FSDP (ZeRO-3) gathers every layer's weights "
+                            "on every microbatch fwd+bwd: wire ~ 2 x nmb x "
+                            "params -> collective-dominated",
+                 flags={}),
+            dict(label="d1 microbatches 16 -> 8",
+                 hypothesis="gathers scale with nmb: predict collective "
+                            "~2x down; activations x2 (remat groups keep "
+                            "the stack small)",
+                 flags={}, microbatches=8),
+            dict(label="d2 microbatches 8 -> 4",
+                 hypothesis="another ~2x on gathers; activation memory x4 "
+                            "vs baseline — check the TPU-projected peak",
+                 flags={}, microbatches=4),
+        ],
+    },
+]
+
+
+def main():
+    from repro.launch.dryrun import run_one
+    from repro.models.sharding import default_strategy
+
+    out = []
+    for camp in CAMPAIGNS:
+        print(f"\n##### {camp['name']}")
+        prev = None
+        iters_out = []
+        for it in camp["iters"]:
+            strategy = None
+            if it.get("strategy") == "serve_replicated":
+                strategy = default_strategy(fsdp_axes=None)
+            r = run_one(
+                camp["arch"], camp["shape"],
+                flags=it.get("flags"), strategy=strategy,
+                cfg_overrides=it.get("cfg_overrides"),
+                microbatches=it.get("microbatches"),
+                verbose=False,
+            )
+            if it.get("modeled_flash"):
+                # substitute the kernel-modeled memory term (conservative:
+                # only traffic positively attributed to the scope)
+                r = dict(r)
+                r["memory_s"] = r["memory_s_flash"]
+                terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                         "collective": r["collective_s"]}
+                r["bottleneck"] = max(terms, key=terms.get)
+            dom = dominant(r)
+            delta = "" if prev is None else (
+                f" | dominant {prev['bottleneck']}:"
+                f" {dominant(prev)*1e3:.1f} -> {dom*1e3:.1f} ms"
+                f" ({dominant(prev)/dom:.2f}x)"
+                if prev["bottleneck"] == r["bottleneck"] else
+                f" | bottleneck {prev['bottleneck']} -> {r['bottleneck']}")
+            print(f"  {it['label']}")
+            print(f"    hypothesis: {it['hypothesis']}")
+            print(f"    compute={r['compute_s']*1e3:9.1f}ms "
+                  f"memory={r['memory_s']*1e3:9.1f}ms "
+                  f"collective={r['collective_s']*1e3:9.1f}ms "
+                  f"bottleneck={r['bottleneck']} "
+                  f"useful={r['useful_flops_ratio']:.3f} "
+                  f"peak_tpu={r['peak_tpu_bytes']/2**30:.2f}GiB{delta}")
+            iters_out.append({"label": it["label"],
+                              "hypothesis": it["hypothesis"], **r})
+            prev = r
+        out.append({"campaign": camp["name"], "iters": iters_out})
+    RESULTS.parent.mkdir(exist_ok=True)
+    RESULTS.write_text(json.dumps(out, indent=1))
+    print(f"\nwrote {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table 2 analogue: per-kernel read-raw / transform / read-cache / execute
+times for one conv operator (k=3, s=1, C=64 -> O=192, like the paper's)."""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import LayerStore
+from repro.core.profiler import Profiler
+from repro.core.registry import LayerSpec, registry_for
+from benchmarks.common import csv_line
+
+
+def run(print_csv=True, cin=64, cout=192, hw=32):
+    rng = np.random.default_rng(0)
+    spec = LayerSpec(
+        "conv_t2", "conv2d",
+        {"kernel": 3, "stride": 1, "padding": "SAME",
+         "in_channels": cin, "out_channels": cout},
+        {"w": (cout, cin, 3, 3), "b": (cout,)},
+    )
+    raw = {"w": rng.standard_normal((cout, cin, 3, 3)).astype(np.float32),
+           "b": np.zeros(cout, np.float32)}
+    x = rng.standard_normal((1, hw, hw, cin)).astype(np.float32)
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        store = LayerStore(d)
+        store.write_raw(spec.name, raw)
+        prof = Profiler(store)
+        for kern in registry_for("conv2d"):
+            if not kern.supports(spec):
+                continue
+            p = prof.profile(spec, kern, x)
+            rows.append(p)
+            if print_csv:
+                print(csv_line(f"kernel_table/{kern.name}/read_raw", p.read_raw_s))
+                print(csv_line(f"kernel_table/{kern.name}/transform", p.transform_s))
+                print(csv_line(f"kernel_table/{kern.name}/read_cache", p.read_cached_s))
+                print(csv_line(
+                    f"kernel_table/{kern.name}/execute", p.exec_s,
+                    f"cached_bytes={p.transformed_bytes};raw_bytes={p.raw_bytes}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Table 4 analogue: offline scheduling-plan generation time + disk storage
+overhead of the post-transformed weight cache, per model."""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, csv_line
+
+MODELS = ["mobilenet", "squeezenet", "resnet18", "alexnet"]
+
+
+def run(print_csv=True):
+    rows = []
+    for model in MODELS:
+        eng, x = build_engine(model)
+        import json
+        plan_stats = json.loads(
+            (eng.store.root / "plan.json").read_text())["stats"]
+        gen = plan_stats["plan_generation_s"]
+        cache_mb = plan_stats["cache_bytes"] / 1e6
+        model_mb = plan_stats["model_bytes"] / 1e6
+        rows.append((model, gen, cache_mb, model_mb))
+        if print_csv:
+            print(csv_line(
+                f"plan_generation/{model}", gen,
+                f"cache_mb={cache_mb:.2f};model_mb={model_mb:.2f};"
+                f"overhead={cache_mb/max(model_mb,1e-9):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""§Roofline table: per (arch × shape × mesh) compute/memory/collective
+terms from the dry-run JSON (benchmarks/results/dryrun_all.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun_all.json"
+
+
+def load():
+    if not RESULTS.exists():
+        return None
+    return json.loads(RESULTS.read_text())
+
+
+def run(print_csv=True):
+    data = load()
+    if data is None:
+        print("# roofline: run `python -m repro.launch.dryrun --arch all "
+              "--shape all --both-meshes --out benchmarks/results/"
+              "dryrun_all.json` first")
+        return []
+    rows = []
+    for r in data["results"]:
+        dom = {"compute": r["compute_s"], "memory": r["memory_s"],
+               "collective": r["collective_s"]}[r["bottleneck"]]
+        rows.append(r)
+        if print_csv:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                  f"{dom*1e6:.1f},"
+                  f"bottleneck={r['bottleneck']};"
+                  f"compute_ms={r['compute_s']*1e3:.2f};"
+                  f"memory_ms={r['memory_s']*1e3:.2f};"
+                  f"collective_ms={r['collective_s']*1e3:.2f};"
+                  f"useful={r['useful_flops_ratio']:.3f};"
+                  f"fits={r['fits_hbm']}")
+    if data.get("failures"):
+        for f in data["failures"]:
+            print(f"roofline/FAIL/{f['arch']}/{f['shape']}/{f['mesh']},0,"
+                  f"error={f['error'][:80]}")
+    return rows
+
+
+def markdown_table(results) -> str:
+    """EXPERIMENTS.md §Roofline table text."""
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms)"
+        " | bottleneck | useful FLOPs | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['peak_memory_bytes']/2**30:.2f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

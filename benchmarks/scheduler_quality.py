@@ -1,0 +1,54 @@
+"""Scheduler quality: Algorithm 1 vs brute-force optimum vs simulated
+annealing (beyond-paper baseline), on synthetic Table-2-shaped profiles.
+Reports makespan ratio to optimal and decision time."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.scheduler import (
+    Choice, LayerCandidates, brute_force_optimal, schedule, schedule_annealed,
+)
+from benchmarks.common import csv_line
+
+
+def _random_cands(rng, n_layers, n_kernels=2):
+    out = []
+    for li in range(n_layers):
+        opts = []
+        for k in range(n_kernels):
+            # one winograd-ish (slow prep / fast exec), one sgemm-ish
+            if k == 0:
+                pl, pb, ex = rng.uniform(2, 6), rng.uniform(1, 3), rng.uniform(0.2, 1)
+            else:
+                pl, pb, ex = rng.uniform(0.2, 1), rng.uniform(0.1, 0.5), rng.uniform(1, 3)
+            opts.append((Choice(f"k{k}", False), pl, pb, ex))
+            opts.append((Choice(f"k{k}", True), pl * 0.3, pb * 0.3, ex))
+        out.append(LayerCandidates(f"l{li}", opts))
+    return out
+
+
+def run(print_csv=True, trials=8):
+    rng = random.Random(0)
+    ratios, ann_ratios = [], []
+    t_heur = t_opt = t_ann = 0.0
+    for _ in range(trials):
+        cands = _random_cands(rng, n_layers=5)
+        t0 = time.perf_counter(); heur = schedule(cands, M_l=2); t_heur += time.perf_counter() - t0
+        t0 = time.perf_counter(); opt = brute_force_optimal(cands, M_l=2); t_opt += time.perf_counter() - t0
+        t0 = time.perf_counter(); ann = schedule_annealed(cands, M_l=2, iters=400); t_ann += time.perf_counter() - t0
+        ratios.append(heur.est_makespan / opt.est_makespan)
+        ann_ratios.append(ann.est_makespan / opt.est_makespan)
+    avg, worst = sum(ratios) / len(ratios), max(ratios)
+    if print_csv:
+        print(csv_line("scheduler/algorithm1_decision", t_heur / trials,
+                       f"avg_ratio_to_opt={avg:.3f};worst={worst:.3f}"))
+        print(csv_line("scheduler/bruteforce_decision", t_opt / trials,
+                       "ratio=1.0"))
+        print(csv_line("scheduler/annealing_decision", t_ann / trials,
+                       f"avg_ratio_to_opt={sum(ann_ratios)/len(ann_ratios):.3f}"))
+    return avg, worst
+
+
+if __name__ == "__main__":
+    run()

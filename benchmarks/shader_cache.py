@@ -1,0 +1,39 @@
+"""§3.4 GPU analogue: XLA executable ("shader") caching — compile time vs
+deserialize-from-disk time per layer, the cold-start stage the compile cache
+removes."""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import build_engine, csv_line
+
+
+def run(print_csv=True, model="mobilenet"):
+    # first engine: cold compile cache -> everything compiles
+    with tempfile.TemporaryDirectory() as store:
+        eng, x = build_engine(model, store=store)
+        eng.run_cold(x)
+        s1 = dict(eng.compile_cache.stats)
+
+        # second engine, same store: executables come from disk
+        from repro.core.engine import ColdEngine
+        from repro.models.cnn import build_cnn
+
+        layers, x2 = build_cnn(model, image=40, width=0.6)
+        eng2 = ColdEngine(layers, store)
+        eng2.plan = eng.plan
+        eng2.profiles = eng.profiles
+        eng2._input_example = x2
+        eng2.make_runtime(n_little=2)
+        s2 = dict(eng2.compile_cache.stats)
+    if print_csv:
+        print(csv_line("shader_cache/compile_total", s1["compile_s"],
+                       f"misses={s1['misses']}"))
+        print(csv_line("shader_cache/deserialize_total", s2["deserialize_s"],
+                       f"disk_hits={s2['disk_hits']};"
+                       f"speedup={s1['compile_s']/max(s2['deserialize_s'],1e-9):.1f}x"))
+    return s1, s2
+
+
+if __name__ == "__main__":
+    run()

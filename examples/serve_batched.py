@@ -1,0 +1,9 @@
+"""Batched serving example: a reduced qwen3 model serving concurrent
+requests with continuous batching (prefill + lockstep decode ticks).
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-32b", "--requests", "6", "--new-tokens", "8"])

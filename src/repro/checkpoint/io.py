@@ -1,0 +1,141 @@
+"""Checkpoint I/O.
+
+Two facilities:
+
+  * ``LayerStore`` — per-layer weight files on disk, the cold-inference
+    engine's substrate. Raw weights live under ``raw/``; post-transformed
+    weights (the paper's §3.1.2 cache) under ``cache/<kernel>/``. Reads are
+    real ``np.load`` disk I/O — these are the 'weights reading' operations
+    the scheduler pipelines.
+
+  * pytree checkpointing (``save_pytree``/``load_pytree``) for the training
+    loop — flat .npy files keyed by the pytree path.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def _safe(name: str) -> str:
+    return name.replace("/", "_")
+
+
+def _save_arr(path_base: Path, v: np.ndarray):
+    """np.save with bf16 support (stored as uint16 + .bf16.npy suffix —
+    numpy cannot round-trip ml_dtypes through .npy)."""
+    import ml_dtypes
+
+    v = np.asarray(v)
+    if v.dtype == ml_dtypes.bfloat16:
+        np.save(path_base.with_suffix(".bf16.npy"), v.view(np.uint16),
+                allow_pickle=False)
+    else:
+        np.save(path_base.with_suffix(".npy"), v, allow_pickle=False)
+
+
+def _load_dir(d: Path) -> Dict[str, np.ndarray]:
+    import ml_dtypes
+
+    out: Dict[str, np.ndarray] = {}
+    for p in sorted(d.glob("*.npy")):
+        if p.name.endswith(".bf16.npy"):
+            out[p.name[: -len(".bf16.npy")]] = np.load(
+                p, allow_pickle=False).view(ml_dtypes.bfloat16)
+        else:
+            out[p.stem] = np.load(p, allow_pickle=False)
+    return out
+
+
+class LayerStore:
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        (self.root / "raw").mkdir(parents=True, exist_ok=True)
+        (self.root / "cache").mkdir(parents=True, exist_ok=True)
+
+    # -- raw weights --------------------------------------------------------
+    def write_raw(self, layer: str, weights: Dict[str, np.ndarray]):
+        d = self.root / "raw" / _safe(layer)
+        d.mkdir(parents=True, exist_ok=True)
+        for k, v in weights.items():
+            _save_arr(d / k, v)
+
+    def read_raw(self, layer: str) -> Dict[str, np.ndarray]:
+        return _load_dir(self.root / "raw" / _safe(layer))
+
+    def raw_bytes(self, layer: str) -> int:
+        d = self.root / "raw" / _safe(layer)
+        return sum(p.stat().st_size for p in d.glob("*.npy"))
+
+    # -- post-transformed cache (§3.1.2) ------------------------------------
+    def _cache_dir(self, layer: str, kernel: str) -> Path:
+        return self.root / "cache" / kernel / _safe(layer)
+
+    def write_cached(self, layer: str, kernel: str, weights: Dict[str, np.ndarray]):
+        d = self._cache_dir(layer, kernel)
+        d.mkdir(parents=True, exist_ok=True)
+        for k, v in weights.items():
+            _save_arr(d / k, v)
+
+    def read_cached(self, layer: str, kernel: str) -> Dict[str, np.ndarray]:
+        return _load_dir(self._cache_dir(layer, kernel))
+
+    def has_cached(self, layer: str, kernel: str) -> bool:
+        return self._cache_dir(layer, kernel).exists()
+
+    def drop_cached(self, layer: str, kernel: str):
+        d = self._cache_dir(layer, kernel)
+        if d.exists():
+            shutil.rmtree(d)
+
+    def cache_bytes(self) -> int:
+        return sum(p.stat().st_size for p in (self.root / "cache").rglob("*.npy"))
+
+    def model_bytes(self) -> int:
+        return sum(p.stat().st_size for p in (self.root / "raw").rglob("*.npy"))
+
+
+# ---------------------------------------------------------------------------
+# training-checkpoint pytrees
+# ---------------------------------------------------------------------------
+def save_pytree(root: Path, tree: Any):
+    import jax
+
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    index = []
+    for i, (path, leaf) in enumerate(flat):
+        key = jax.tree_util.keystr(path)
+        fname = f"leaf_{i:05d}.npy"
+        arr = np.asarray(leaf)
+        dtype_str = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in dtype_str:
+            # numpy can't round-trip bf16 via .npy: store widened to f32,
+            # the recorded dtype restores it on load
+            import jax.numpy as jnp
+
+            arr = np.asarray(jnp.asarray(leaf, jnp.float32))
+            dtype_str = "bfloat16"
+        np.save(root / fname, arr, allow_pickle=False)
+        index.append({"key": key, "file": fname, "dtype": dtype_str})
+    (root / "index.json").write_text(json.dumps(
+        {"leaves": index, "treedef": str(treedef)}, indent=1))
+
+
+def load_pytree(root: Path, like: Any) -> Any:
+    import jax
+
+    root = Path(root)
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    idx = json.loads((root / "index.json").read_text())["leaves"]
+    assert len(idx) == len(flat), (len(idx), len(flat))
+    leaves = [np.load(root / e["file"], allow_pickle=False) for e in idx]
+    import jax.numpy as jnp
+
+    leaves = [jnp.asarray(l, dtype=f.dtype) for l, f in zip(leaves, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

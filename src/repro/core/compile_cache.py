@@ -1,0 +1,76 @@
+"""Executable ("shader") cache — §3.4 adapted to XLA.
+
+On GPU the paper caches compiled SPIR-V shaders to skip shader compilation in
+cold inference. The XLA analogue is jit compilation: each (kernel, shape)
+pair costs a lower+compile on first use. We cache serialized compiled
+executables on disk via ``jax.experimental.serialize_executable`` and restore
+them on cold start, turning the compile stage into a (much cheaper) disk
+read — exactly the shader-cache trade.
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+
+def _key(kernel_name: str, spec_name: str, shapes: Tuple) -> str:
+    h = hashlib.sha1(repr((kernel_name, spec_name, shapes)).encode()).hexdigest()
+    return h[:24]
+
+
+class CompileCache:
+    def __init__(self, root: Optional[Path] = None):
+        self.root = Path(root) if root else None
+        if self.root:
+            self.root.mkdir(parents=True, exist_ok=True)
+        self.mem: Dict[str, Callable] = {}
+        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0,
+                      "compile_s": 0.0, "deserialize_s": 0.0}
+
+    def get(self, kernel_name: str, spec, fn: Callable, w_example, x_example):
+        """Returns a compiled callable for fn(w, x)."""
+        shapes = (
+            tuple(sorted((k, v.shape, str(v.dtype)) for k, v in w_example.items())),
+            (x_example.shape, str(x_example.dtype)),
+        )
+        key = _key(kernel_name, spec.name, shapes)
+        if key in self.mem:
+            self.stats["hits"] += 1
+            return self.mem[key]
+        jitted = jax.jit(fn)
+        path = self.root / f"{key}.xla" if self.root else None
+        if path and path.exists():
+            try:
+                from jax.experimental import serialize_executable as se
+
+                t0 = time.perf_counter()
+                with open(path, "rb") as f:
+                    payload = pickle.load(f)
+                compiled = se.deserialize_and_load(*payload)
+                self.stats["deserialize_s"] += time.perf_counter() - t0
+                self.stats["disk_hits"] += 1
+                self.mem[key] = compiled
+                return compiled
+            except Exception:
+                pass  # stale/incompatible cache entry: recompile below
+        t0 = time.perf_counter()
+        lowered = jitted.lower(w_example, x_example)
+        compiled = lowered.compile()
+        self.stats["compile_s"] += time.perf_counter() - t0
+        self.stats["misses"] += 1
+        if path:
+            try:
+                from jax.experimental import serialize_executable as se
+
+                payload = se.serialize(compiled)
+                with open(path, "wb") as f:
+                    pickle.dump(payload, f)
+            except Exception:
+                pass
+        self.mem[key] = compiled
+        return compiled

@@ -1,0 +1,260 @@
+"""ColdEngine — the NNV12 workflow (Fig. 4): offline decision generation +
+online cold-inference runtime.
+
+Offline ``decide()`` (runs once when a model lands on the device):
+  1. profile every (layer × kernel) read/transform/execute (+compile);
+  2. build per-layer candidate lists (kernel × {raw, cached}) and
+     Pareto-filter them (Algorithm 1 line 1);
+  3. run the kernel scheduler (Algorithm 1) to get the plan;
+  4. materialize the post-transformed weight cache for chosen cached layers
+     (and drop unused cache entries — storage accounting);
+  5. optionally pre-serialize compiled executables (the shader cache).
+
+Online ``run_cold()`` executes the plan with the pipelined runtime;
+``run_warm()`` is the steady-state path (everything resident + compiled).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import LayerStore
+from repro.core.compile_cache import CompileCache
+from repro.core.pipeline import PipelineRuntime, RunResult
+from repro.core.profiler import CoreModel, OpProfile, Profiler
+from repro.core.registry import (
+    Kernel, LayerSpec, StatelessKernel, registry_for,
+)
+from repro.core.scheduler import (
+    Choice, LayerCandidates, Plan, pareto_filter, schedule,
+)
+
+
+@dataclass
+class LayerDef:
+    """One unit of the model graph: spec + (for stateless units) a fn."""
+    spec: LayerSpec
+    weights: Dict[str, np.ndarray] = field(default_factory=dict)
+    fn: Optional[Callable] = None  # stateless units
+
+
+class ColdEngine:
+    def __init__(
+        self,
+        layers: List[LayerDef],
+        store_dir: Path,
+        *,
+        core_model: CoreModel = CoreModel(),
+        allow_lossy: bool = False,
+        shader_cache: bool = True,
+    ):
+        self.layers = layers
+        self.specs = [l.spec for l in layers]
+        self.store = LayerStore(Path(store_dir))
+        self.core_model = core_model
+        self.allow_lossy = allow_lossy
+        self.compile_cache = CompileCache(
+            Path(store_dir) / "xla_cache" if shader_cache else None)
+        self.plan: Optional[Plan] = None
+        self.profiles: Dict[str, List[OpProfile]] = {}
+        self._input_example: Optional[np.ndarray] = None
+        self._layer_inputs: Optional[List[np.ndarray]] = None
+        self._jitted_cache: Dict[tuple, Dict[str, Callable]] = {}
+        # persist raw weights (the on-device model files)
+        for l in layers:
+            if l.weights:
+                self.store.write_raw(l.spec.name, l.weights)
+
+    # ------------------------------------------------------------------
+    def _kernels_for(self, spec: LayerSpec) -> List[Kernel]:
+        if spec.op_type == "stateless":
+            layer = next(l for l in self.layers if l.spec.name == spec.name)
+            return [StatelessKernel(layer.fn, name="fn")]
+        ks = [k for k in registry_for(spec.op_type, allow_lossy=self.allow_lossy)
+              if k.supports(spec)]
+        if not ks:
+            raise ValueError(f"no kernel for {spec}")
+        return ks
+
+    def _trace_shapes(self, x: np.ndarray) -> List[np.ndarray]:
+        """Propagate an example input through default kernels to get each
+        layer's input example (needed to profile per-layer execution)."""
+        xs = []
+        y = jnp.asarray(x)
+        for l in self.layers:
+            xs.append(np.asarray(y))
+            kern = self._kernels_for(l.spec)[0]
+            w = {k: jnp.asarray(v) for k, v in l.weights.items()}
+            y = kern.execute(w, y, l.spec)
+        self._output_example = np.asarray(y)
+        return xs
+
+    # ------------------------------------------------------------------
+    def decide(
+        self, x_example: np.ndarray, *, n_little: int = 3,
+        force_reprofile: bool = False, calibrate_interference: bool = True,
+    ) -> Dict[str, Any]:
+        """Offline decision stage. Returns stats incl. generation time."""
+        t0 = time.perf_counter()
+        self._input_example = x_example
+        layer_inputs = self._layer_inputs = self._trace_shapes(x_example)
+        prof = Profiler(self.store)
+        cands: List[LayerCandidates] = []
+        cm = self.core_model
+        # §3.2: co-running preps share disk bandwidth — measure the real
+        # per-op slowdown with n_little concurrent readers and fold it into
+        # the little-core prep costs the scheduler optimizes against.
+        self.io_interference = 1.0
+        if calibrate_interference and n_little > 1:
+            from repro.core.profiler import measure_read_interference
+
+            self.io_interference = measure_read_interference(
+                self.store, [l.spec.name for l in self.layers], n_little)
+        for l, xin in zip(self.layers, layer_inputs):
+            plist: List[OpProfile] = []
+            options = []
+            for kern in self._kernels_for(l.spec):
+                p = prof.profile(l.spec, kern, xin)
+                plist.append(p)
+                for use_cache in ((False, True) if l.spec.weight_shapes else (False,)):
+                    prep_big = p.prep_s(use_cache)
+                    # little-core factors per op kind (Fig. 6 affinity),
+                    # reads scaled by the measured co-read interference
+                    rd = cm.little_read * self.io_interference
+                    if use_cache:
+                        prep_little = p.read_cached_s * rd
+                    else:
+                        prep_little = (p.read_raw_s * rd
+                                       + p.transform_s * cm.little_transform)
+                    options.append(
+                        (Choice(kern.name, use_cache), prep_little, prep_big,
+                         p.exec_s))
+            self.profiles[l.spec.name] = plist
+            filtered = pareto_filter([(c, pl, ex) for c, pl, pb, ex in options])
+            keep_keys = {id(c[0]) for c in filtered}
+            options = [o for o in options if id(o[0]) in keep_keys]
+            cands.append(LayerCandidates(layer=l.spec.name, options=options))
+
+        self.plan = schedule(cands, n_little)
+        # materialize/drop the weight cache per the plan
+        for l, choice in zip(self.layers, self.plan.choices):
+            if not l.spec.weight_shapes:
+                continue
+            kern = self._kernel_by_name(l.spec, choice.kernel)
+            for k2 in self._kernels_for(l.spec):
+                if k2.name != kern.name or not choice.use_cache:
+                    self.store.drop_cached(l.spec.name, k2.name)
+            if choice.use_cache:
+                raw = self.store.read_raw(l.spec.name)
+                self.store.write_cached(l.spec.name, kern.name,
+                                        kern.transform(raw, l.spec))
+        gen_s = time.perf_counter() - t0
+        stats = {
+            "plan_generation_s": gen_s,
+            "est_makespan_s": self.plan.est_makespan,
+            "io_interference": self.io_interference,
+            "cache_bytes": self.store.cache_bytes(),
+            "model_bytes": self.store.model_bytes(),
+            "choices": {l.spec.name: (c.kernel, c.use_cache)
+                        for l, c in zip(self.layers, self.plan.choices)},
+        }
+        (self.store.root / "plan.json").write_text(json.dumps(
+            {"plan": self.plan.to_dict(), "stats": stats}, indent=1))
+        return stats
+
+    def _kernel_by_name(self, spec: LayerSpec, name: str) -> Kernel:
+        return next(k for k in self._kernels_for(spec) if k.name == name)
+
+    # ------------------------------------------------------------------
+    def _jitted_map(self, choices: List[Choice], x_example) -> Dict[str, Callable]:
+        """Compiled executables per layer (through the shader cache);
+        memoized per kernel-choice tuple."""
+        key = tuple(c.kernel for c in choices)
+        if key in self._jitted_cache:
+            return self._jitted_cache[key]
+        jitted = {}
+        if self._layer_inputs is None:
+            self._layer_inputs = self._trace_shapes(x_example)
+        layer_inputs = self._layer_inputs
+        for l, ch, xin in zip(self.layers, choices, layer_inputs):
+            kern = self._kernel_by_name(l.spec, ch.kernel)
+            if l.spec.weight_shapes:
+                raw = self.store.read_raw(l.spec.name)
+                w_ex = {k: jnp.asarray(v)
+                        for k, v in kern.transform(raw, l.spec).items()}
+            else:
+                w_ex = {}
+            fn = (lambda kern, spec: lambda w, x: kern.execute(w, x, spec))(kern, l.spec)
+            compiled = self.compile_cache.get(kern.name, l.spec, fn, w_ex,
+                                              jnp.asarray(xin))
+            jitted[l.spec.name] = compiled
+        self._jitted_cache[key] = jitted
+        return jitted
+
+    def make_runtime(self, *, n_little: int = 3, plan: Optional[Plan] = None,
+                     work_stealing: bool = True) -> PipelineRuntime:
+        plan = plan or self.plan
+        assert plan is not None, "call decide() first"
+        kernels = {l.spec.name: self._kernel_by_name(l.spec, c.kernel)
+                   for l, c in zip(self.layers, plan.choices)}
+        use_cache = {l.spec.name: c.use_cache
+                     for l, c in zip(self.layers, plan.choices)}
+        jitted = self._jitted_map(plan.choices, self._input_example)
+        return PipelineRuntime(
+            self.specs, kernels, use_cache, self.store, jitted,
+            n_little=n_little, work_stealing=work_stealing,
+        )
+
+    def run_cold(self, x, *, n_little: int = 3, mode: str = "nnv12") -> RunResult:
+        """mode: nnv12 (full) | sequential (ncnn-like baseline) |
+        nnv12_nosteal"""
+        rt = self.make_runtime(n_little=n_little,
+                               work_stealing=(mode != "nnv12_nosteal"))
+        if mode == "sequential":
+            # baseline: warm-best kernels, no cache, fully sequential
+            warm_best = self.warm_best_choices()
+            kernels = {l.spec.name: self._kernel_by_name(l.spec, c.kernel)
+                       for l, c in zip(self.layers, warm_best)}
+            rt2 = PipelineRuntime(
+                self.specs, kernels, {n: False for n in rt.use_cache},
+                self.store, self._jitted_map(warm_best, self._input_example),
+                n_little=0)
+            return rt2.run_sequential(jnp.asarray(x))
+        return rt.run(jnp.asarray(x), self.plan)
+
+    def run_warm(self, x, repeats: int = 3) -> float:
+        """Steady-state latency with warm-best kernels, weights resident."""
+        choices = self.warm_best_choices()
+        jitted = self._jitted_map(choices, self._input_example)
+        weights = {}
+        for l, ch in zip(self.layers, choices):
+            kern = self._kernel_by_name(l.spec, ch.kernel)
+            raw = self.store.read_raw(l.spec.name) if l.spec.weight_shapes else {}
+            w = kern.transform(raw, l.spec) if l.spec.weight_shapes else {}
+            weights[l.spec.name] = {k: jnp.asarray(v) for k, v in w.items()}
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            y = jnp.asarray(x)
+            for l in self.layers:
+                y = jitted[l.spec.name](weights[l.spec.name], y)
+            jax.block_until_ready(y)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def warm_best_choices(self) -> List[Choice]:
+        """Per-layer kernel with the fastest *execution* (ncnn's policy)."""
+        out = []
+        for l in self.layers:
+            ps = self.profiles.get(l.spec.name)
+            assert ps, "decide() must run first"
+            best = min(ps, key=lambda p: p.exec_s)
+            out.append(Choice(best.kernel, False))
+        return out

@@ -1,0 +1,176 @@
+"""Online pipelined runtime — §3.1.3 / §3.3 at execution time.
+
+Executes a scheduling Plan with real threads and real work:
+  * one worker thread per (simulated) little core, each draining its queue of
+    preparation ops (disk read + weights transform — numpy releases the GIL
+    for the heavy parts);
+  * the caller's thread plays the big-core cluster: it runs any big-core
+    preps first, then the execution chain e_1..e_N, blocking on each layer's
+    prep-completion event;
+  * work stealing: an idle worker steals the head of the longest remaining
+    queue (§3.3 'dealing with hardware dynamics').
+
+Every op's (start, end) is recorded for the benchmark breakdowns.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import Kernel, LayerSpec
+from repro.core.scheduler import Plan
+
+
+@dataclass
+class OpTrace:
+    layer: str
+    kind: str
+    core: str
+    start: float
+    end: float
+
+
+@dataclass
+class RunResult:
+    output: Any
+    total_s: float
+    traces: List[OpTrace] = field(default_factory=list)
+    weights: Optional[Dict[str, Any]] = None  # resident post-run weights
+
+    def stage_seconds(self) -> Dict[str, float]:
+        agg: Dict[str, float] = {}
+        for t in self.traces:
+            agg[t.kind] = agg.get(t.kind, 0.0) + (t.end - t.start)
+        return agg
+
+
+class PipelineRuntime:
+    def __init__(
+        self,
+        specs: List[LayerSpec],
+        kernels: Dict[str, Kernel],       # layer name -> chosen kernel
+        use_cache: Dict[str, bool],
+        store,
+        jitted: Dict[str, Callable],      # layer name -> jitted exec fn
+        n_little: int,
+        work_stealing: bool = True,
+    ):
+        self.specs = {s.name: s for s in specs}
+        self.order = [s.name for s in specs]
+        self.kernels = kernels
+        self.use_cache = use_cache
+        self.store = store
+        self.jitted = jitted
+        self.n_little = n_little
+        self.work_stealing = work_stealing
+
+    # -- one preparation op (read [+ transform]) ----------------------------
+    def _prepare(self, layer: str, weights_out: Dict[str, Any],
+                 traces: List[OpTrace], core: str, t0: float, lock):
+        spec = self.specs[layer]
+        kern = self.kernels[layer]
+        if not spec.weight_shapes:
+            with lock:
+                weights_out[layer] = {}
+            return
+        if self.use_cache.get(layer, False):
+            ts = time.perf_counter()
+            w = self.store.read_cached(layer, kern.name)
+            te = time.perf_counter()
+            traces.append(OpTrace(layer, "read", core, ts - t0, te - t0))
+        else:
+            ts = time.perf_counter()
+            raw = self.store.read_raw(layer)
+            tm = time.perf_counter()
+            w = kern.transform(raw, spec)
+            te = time.perf_counter()
+            traces.append(OpTrace(layer, "read", core, ts - t0, tm - t0))
+            traces.append(OpTrace(layer, "transform", core, tm - t0, te - t0))
+        with lock:
+            weights_out[layer] = w
+
+    def run(self, x, plan: Plan) -> RunResult:
+        t0 = time.perf_counter()
+        weights: Dict[str, Any] = {}
+        traces: List[OpTrace] = []
+        lock = threading.Lock()
+        done_events = {name: threading.Event() for name in self.order}
+
+        queues = [[self.order[i] for i in q] for q in plan.little_queues]
+        qlock = threading.Lock()
+
+        def steal() -> Optional[str]:
+            with qlock:
+                donor = max(queues, key=lambda q: len(q), default=None)
+                if donor:
+                    return donor.pop(0) if donor else None
+            return None
+
+        def worker(j: int):
+            core = f"little{j}"
+            while True:
+                with qlock:
+                    layer = queues[j].pop(0) if queues[j] else None
+                if layer is None and self.work_stealing:
+                    layer = steal()
+                if layer is None:
+                    return
+                self._prepare(layer, weights, traces, core, t0, lock)
+                done_events[layer].set()
+
+        threads = [threading.Thread(target=worker, args=(j,), daemon=True)
+                   for j in range(len(queues))]
+        for th in threads:
+            th.start()
+
+        # big cores: preps first, then the execution chain
+        for i in plan.big_prep:
+            layer = self.order[i]
+            self._prepare(layer, weights, traces, "big", t0, lock)
+            done_events[layer].set()
+
+        y = x
+        for name in self.order:
+            done_events[name].wait()
+            with lock:
+                w = weights[name]
+            wj = {k: jnp.asarray(v) for k, v in w.items()}
+            ts = time.perf_counter()
+            y = self.jitted[name](wj, y)
+            jax.block_until_ready(y)
+            te = time.perf_counter()
+            traces.append(OpTrace(name, "execute", "big", ts - t0, te - t0))
+        for th in threads:
+            th.join()
+        return RunResult(output=y, total_s=time.perf_counter() - t0,
+                         traces=traces, weights=weights)
+
+    # -- baseline: fully sequential cold inference (ncnn-like) --------------
+    def run_sequential(self, x, kernels: Optional[Dict[str, Kernel]] = None) -> RunResult:
+        kernels = kernels or self.kernels
+        t0 = time.perf_counter()
+        traces: List[OpTrace] = []
+        weights: Dict[str, Any] = {}
+        for name in self.order:           # read all
+            ts = time.perf_counter()
+            weights[name] = self.store.read_raw(name) if self.specs[name].weight_shapes else {}
+            traces.append(OpTrace(name, "read", "big", ts - t0, time.perf_counter() - t0))
+        for name in self.order:           # transform all
+            if not self.specs[name].weight_shapes:
+                continue
+            ts = time.perf_counter()
+            weights[name] = kernels[name].transform(weights[name], self.specs[name])
+            traces.append(OpTrace(name, "transform", "big", ts - t0, time.perf_counter() - t0))
+        y = x
+        for name in self.order:           # execute all
+            wj = {k: jnp.asarray(v) for k, v in weights[name].items()}
+            ts = time.perf_counter()
+            y = self.jitted[name](wj, y)
+            jax.block_until_ready(y)
+            traces.append(OpTrace(name, "execute", "big", ts - t0, time.perf_counter() - t0))
+        return RunResult(output=y, total_s=time.perf_counter() - t0, traces=traces)

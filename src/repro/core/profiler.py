@@ -1,0 +1,178 @@
+"""Per-operation profiling — the measurement substrate of the decision stage.
+
+The paper profiles read / transform / execute per (layer, kernel) on the real
+device. This container has one CPU core, so:
+
+  * `wall` numbers are real measured seconds on this host (real disk reads,
+    real transforms, real jitted execution);
+  * the big.LITTLE asymmetry is applied through a calibratable ``CoreModel``
+    whose default factors follow the paper's Fig. 6 (big core ≈ 6× faster at
+    execution, 2× at reads, 3.8× at transforms than a little core) — used by
+    the deterministic scheduler simulation (sim mode).
+
+Profiles are cached to JSON next to the model store.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.registry import Kernel, LayerSpec, OpKind
+
+
+@dataclass(frozen=True)
+class CoreModel:
+    """Relative op-time multipliers for a little core vs a big core (Fig. 6)."""
+    little_exec: float = 6.0
+    little_read: float = 2.0
+    little_transform: float = 3.8
+    n_big: int = 4
+    n_little: int = 4
+    # multithread scaling on big cores for execution (near-linear, Fig. 6)
+    exec_parallel_eff: float = 0.85
+
+    def little_factor(self, kind: OpKind) -> float:
+        return {
+            OpKind.READ: self.little_read,
+            OpKind.TRANSFORM: self.little_transform,
+            OpKind.EXECUTE: self.little_exec,
+            OpKind.COMPILE: self.little_transform,
+        }[kind]
+
+
+@dataclass
+class OpProfile:
+    layer: str
+    kernel: str
+    read_raw_s: float
+    transform_s: float
+    read_cached_s: float
+    exec_s: float
+    compile_s: float
+    raw_bytes: int
+    transformed_bytes: int
+
+    def prep_s(self, use_cache: bool) -> float:
+        """read(+transform) time on a BIG core."""
+        return self.read_cached_s if use_cache else self.read_raw_s + self.transform_s
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def _time(fn, *args, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Profiler:
+    def __init__(self, store, repeats: int = 3, cold_reads: bool = True):
+        self.store = store  # checkpoint.LayerStore
+        self.repeats = repeats
+        self.cold_reads = cold_reads
+
+    def _time_read(self, fn) -> float:
+        """Disk-read timing. With cold_reads (and privilege) the OS page
+        cache is dropped first, like the paper's methodology; otherwise the
+        warm-cache read time is reported."""
+        from repro.core.oscache import CAN_DROP, drop_page_cache
+
+        if self.cold_reads and CAN_DROP:
+            drop_page_cache()
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+        return _time(fn, repeats=self.repeats)
+
+    def profile(
+        self, spec: LayerSpec, kernel: Kernel, x: np.ndarray,
+    ) -> OpProfile:
+        import jax.numpy as jnp
+
+        raw = self.store.read_raw(spec.name)
+        t_read = self._time_read(lambda: self.store.read_raw(spec.name))
+        if spec.weight_shapes:
+            t_transform = _time(lambda: kernel.transform(raw, spec), repeats=self.repeats)
+            transformed = kernel.transform(raw, spec)
+            self.store.write_cached(spec.name, kernel.name, transformed)
+            t_read_cached = self._time_read(
+                lambda: self.store.read_cached(spec.name, kernel.name),
+            )
+            tbytes = sum(v.nbytes for v in transformed.values())
+            rbytes = sum(v.nbytes for v in raw.values())
+        else:
+            t_transform, t_read_cached, tbytes, rbytes = 0.0, 0.0, 0, 0
+            transformed = raw
+        wj = {k: jnp.asarray(v) for k, v in transformed.items()}
+        xj = jnp.asarray(x)
+        fn = jax.jit(lambda w, x: kernel.execute(w, x, spec))
+        t0 = time.perf_counter()
+        y = fn(wj, xj)
+        jax.block_until_ready(y)
+        t_compile_and_first = time.perf_counter() - t0
+        t_exec = _time(lambda: jax.block_until_ready(fn(wj, xj)), repeats=self.repeats)
+        return OpProfile(
+            layer=spec.name, kernel=kernel.name,
+            read_raw_s=t_read, transform_s=t_transform,
+            read_cached_s=t_read_cached, exec_s=t_exec,
+            compile_s=max(t_compile_and_first - t_exec, 0.0),
+            raw_bytes=rbytes, transformed_bytes=tbytes,
+        )
+
+
+def measure_read_interference(store, layer_names, n_threads: int = 3) -> float:
+    """§3.2: co-running read operations interfere through shared disk
+    bandwidth. Measures the real slowdown factor on this host: wall time of
+    n_threads concurrent cold reads of different layers vs the same reads
+    serial. Returns per-op slowdown ≥ 1 (1.0 = no interference)."""
+    import threading
+
+    from repro.core.oscache import CAN_DROP, drop_page_cache
+
+    names = [n for n in layer_names if store.raw_bytes(n) > 0][: n_threads * 2]
+    if len(names) < 2:
+        return 1.0
+    names = names[:n_threads]
+
+    if CAN_DROP:
+        drop_page_cache()
+    t0 = time.perf_counter()
+    for n in names:
+        store.read_raw(n)
+    serial = time.perf_counter() - t0
+
+    if CAN_DROP:
+        drop_page_cache()
+    threads = [threading.Thread(target=store.read_raw, args=(n,))
+               for n in names]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    concurrent = time.perf_counter() - t0
+    # perfect overlap -> concurrent == serial/n; full serialization ->
+    # concurrent == serial. slowdown per op = concurrent * n / serial.
+    return max(1.0, concurrent * len(names) / max(serial, 1e-9))
+
+
+def save_profiles(path: Path, profiles: Dict[str, List[OpProfile]]):
+    out = {k: [p.to_dict() for p in v] for k, v in profiles.items()}
+    path.write_text(json.dumps(out, indent=1))
+
+
+def load_profiles(path: Path) -> Optional[Dict[str, List[OpProfile]]]:
+    if not path.exists():
+        return None
+    raw = json.loads(path.read_text())
+    return {k: [OpProfile(**d) for d in v] for k, v in raw.items()}

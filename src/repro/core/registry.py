@@ -1,0 +1,312 @@
+"""Operator/kernel registry — §3.1.1 "one operator, many kernels".
+
+A *kernel* is one concrete implementation of an operator, with its own
+weights-transformation stage. Mirroring ncnn's 28 conv kernels, each operator
+type registers several kernels with different (transform cost, execution
+cost, transformed size) trade-offs; the scheduler picks per layer.
+
+Kernels expose:
+  transform(raw)        raw weight dict -> execution-format weight dict
+  execute(w, x)         jnp forward (jitted once per shape by the engine)
+  supports(spec)        static applicability predicate
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OpKind(enum.Enum):
+    READ = "read"
+    TRANSFORM = "transform"
+    EXECUTE = "execute"
+    COMPILE = "compile"  # GPU-analogue stage: jit/"shader" compilation
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One schedulable unit of the model (a layer, in the paper's terms)."""
+    name: str
+    op_type: str                  # 'conv2d' | 'linear' | 'stateless' | ...
+    config: Dict[str, Any] = field(default_factory=dict)
+    # weight name -> shape; empty for stateless units (e.g. attention core)
+    weight_shapes: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+
+    @property
+    def weight_bytes(self) -> int:
+        return sum(4 * math.prod(s) for s in self.weight_shapes.values())
+
+
+@dataclass(frozen=True)
+class Operation:
+    """One stage of one layer's kernel — the scheduler's unit of work."""
+    layer: str
+    kind: OpKind
+    index: int  # layer index in the chain
+
+
+class Kernel:
+    name: str = "base"
+    op_type: str = "generic"
+
+    def supports(self, spec: LayerSpec) -> bool:
+        return True
+
+    def transform(self, raw: Dict[str, np.ndarray], spec: LayerSpec) -> Dict[str, np.ndarray]:
+        """Raw -> execution-ready weights. Runs on host (little cores)."""
+        return raw
+
+    def execute(self, w: Dict[str, jnp.ndarray], x: jnp.ndarray, spec: LayerSpec) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<Kernel {self.op_type}/{self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# linear kernels
+# ---------------------------------------------------------------------------
+class LinearDirect(Kernel):
+    """Plain x @ W — zero transform (the paper's '3x3s1'/'general' analogue)."""
+    name = "direct"
+    op_type = "linear"
+
+    def execute(self, w, x, spec):
+        y = x @ w["w"]
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
+class LinearPacked(Kernel):
+    """MXU block-tiled layout: W (K,N) -> (N/bn, K/bk, bk, bn), padded to
+    multiples of 128. Fast execution on the Pallas blocked-matmul kernel
+    (repro.kernels.matmul) but the packing pass is a real transformation cost
+    — the sgemm_pack4 analogue."""
+    name = "packed"
+    op_type = "linear"
+    bk = 128
+    bn = 128
+
+    def transform(self, raw, spec):
+        w = raw["w"]
+        K, N = w.shape
+        bk, bn = self.bk, self.bn
+        Kp = (K + bk - 1) // bk * bk
+        Np = (N + bn - 1) // bn * bn
+        wp = np.zeros((Kp, Np), w.dtype)
+        wp[:K, :N] = w
+        packed = np.ascontiguousarray(
+            wp.reshape(Kp // bk, bk, Np // bn, bn).transpose(2, 0, 1, 3)
+        )
+        out = {"w_packed": packed, "orig_kn": np.array([K, N], np.int64)}
+        if "b" in raw:
+            out["b"] = raw["b"]
+        return out
+
+    def execute(self, w, x, spec):
+        packed = w["w_packed"]  # (nN, nK, bk, bn)
+        K, N = spec.config["in_features"], spec.config["out_features"]
+        lead = x.shape[:-1]
+        xf = x.reshape(-1, x.shape[-1])
+        M = xf.shape[0]
+        Kp = packed.shape[1] * packed.shape[2]
+        if Kp != K:
+            xf = jnp.pad(xf, ((0, 0), (0, Kp - K)))
+        xb = xf.reshape(M, packed.shape[1], packed.shape[2])
+        # blocked contraction consuming the packed layout directly
+        y = jnp.einsum("mkc,nkcd->mnd", xb, packed)
+        y = y.reshape(M, packed.shape[0] * packed.shape[3])[:, :N]
+        if "b" in w:
+            y = y + w["b"]
+        return y.reshape(*lead, N)
+
+
+class LinearLowPrecision(Kernel):
+    """bf16-converted weights: halves the bytes read back from the
+    transformed-weights cache (a disk-I/O/exec trade, like the paper's pack4
+    variants). Matmul runs in bf16 with f32 accumulation — bitwise-identical
+    outputs are NOT guaranteed, so this kernel is only eligible when the
+    engine is configured with ``allow_lossy`` (off by default: the paper's
+    zero-accuracy-loss principle)."""
+    name = "bf16"
+    op_type = "linear"
+
+    def transform(self, raw, spec):
+        out = {"w": raw["w"].astype(np.dtype(jnp.bfloat16).newbyteorder("=")) if False
+               else np.asarray(jnp.asarray(raw["w"], jnp.bfloat16))}
+        if "b" in raw:
+            out["b"] = raw["b"]
+        return out
+
+    def execute(self, w, x, spec):
+        y = jnp.dot(x.astype(jnp.bfloat16), w["w"],
+                    preferred_element_type=jnp.float32)
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
+# ---------------------------------------------------------------------------
+# conv2d kernels (NHWC, filters OIHW in raw checkpoints — ncnn-style)
+# ---------------------------------------------------------------------------
+def _conv_dims(spec):
+    c = spec.config
+    return c["kernel"], c.get("stride", 1), c.get("padding", "SAME")
+
+
+class ConvDirect(Kernel):
+    """lax.conv_general_dilated on raw OIHW filters — zero transform."""
+    name = "direct"
+    op_type = "conv2d"
+
+    def execute(self, w, x, spec):
+        k, s, p = _conv_dims(spec)
+        y = jax.lax.conv_general_dilated(
+            x, w["w"], window_strides=(s, s), padding=p,
+            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        )
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
+class ConvIm2col(Kernel):
+    """im2col + sgemm: filters reshaped (O,I,kh,kw) -> (I*kh*kw, O). Cheap
+    transform, fast-ish exec (the paper's sgemm kernels)."""
+    name = "im2col_sgemm"
+    op_type = "conv2d"
+
+    def transform(self, raw, spec):
+        w = raw["w"]  # (O, I, kh, kw)
+        O, I, kh, kw = w.shape
+        wt = np.ascontiguousarray(w.transpose(2, 3, 1, 0).reshape(kh * kw * I, O))
+        out = {"w_mat": wt}
+        if "b" in raw:
+            out["b"] = raw["b"]
+        return out
+
+    def execute(self, w, x, spec):
+        k, s, p = _conv_dims(spec)
+        N, H, W_, C = x.shape
+        if p == "SAME":
+            pad = ((k - 1) // 2, k // 2)
+        else:
+            pad = (0, 0)
+        xp = jnp.pad(x, ((0, 0), pad, pad, (0, 0)))
+        Ho = (xp.shape[1] - k) // s + 1
+        Wo = (xp.shape[2] - k) // s + 1
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (k, k), (s, s), p, dimension_numbers=("NHWC", "OIHW", "NHWC")
+        )  # (N, Ho, Wo, C*k*k) with feature order C-major?
+        # conv_general_dilated_patches returns features ordered (C, kh, kw)
+        pm = patches.reshape(N * Ho * Wo, C, k, k).transpose(0, 2, 3, 1)
+        pm = pm.reshape(N * Ho * Wo, k * k * C)
+        y = pm @ w["w_mat"]
+        y = y.reshape(N, Ho, Wo, -1)
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
+class ConvWinograd(Kernel):
+    """Winograd F(2x2, 3x3): filter transform (O,I,3,3) -> (16, I, O) done
+    offline/on little cores (the paper's flagship heavy transform, Fig. 3);
+    execution is 16 batched (I,O) matmuls over 4x4 input tiles — maps onto
+    the MXU (Pallas kernel: repro.kernels.conv_winograd)."""
+    name = "winograd_f2x3"
+    op_type = "conv2d"
+
+    G = np.array(
+        [[1.0, 0.0, 0.0],
+         [0.5, 0.5, 0.5],
+         [0.5, -0.5, 0.5],
+         [0.0, 0.0, 1.0]], np.float32)
+    Bt = np.array(
+        [[1, 0, -1, 0],
+         [0, 1, 1, 0],
+         [0, -1, 1, 0],
+         [0, 1, 0, -1]], np.float32)
+    At = np.array(
+        [[1, 1, 1, 0],
+         [0, 1, -1, -1]], np.float32)
+
+    def supports(self, spec):
+        k, s, _ = _conv_dims(spec)
+        return k == 3 and s == 1
+
+    def transform(self, raw, spec):
+        w = raw["w"]  # (O, I, 3, 3)
+        O, I, _, _ = w.shape
+        # U = G g G^T per (O, I): g (O,I,3,3) -> (O,I,4,4)
+        U = np.einsum("ab,oibc,dc->oiad", self.G, w, self.G, optimize=True)
+        Ut = np.ascontiguousarray(U.transpose(2, 3, 1, 0).reshape(16, I, O))
+        out = {"w_wino": Ut}
+        if "b" in raw:
+            out["b"] = raw["b"]
+        return out
+
+    def execute(self, w, x, spec):
+        U = w["w_wino"]  # (16, I, O)
+        N, H, W_, C = x.shape
+        pad_h = (-H) % 2 + 1
+        pad_w = (-W_) % 2 + 1
+        xp = jnp.pad(x, ((0, 0), (1, pad_h), (1, pad_w), (0, 0)))
+        Hp, Wp = xp.shape[1], xp.shape[2]
+        nth, ntw = (Hp - 2) // 2, (Wp - 2) // 2
+        # extract overlapping 4x4 tiles with stride 2
+        idx_h = (jnp.arange(nth) * 2)[:, None] + jnp.arange(4)[None, :]
+        idx_w = (jnp.arange(ntw) * 2)[:, None] + jnp.arange(4)[None, :]
+        tiles = xp[:, idx_h][:, :, :, idx_w]        # (N, nth, 4, ntw, 4, C)
+        tiles = tiles.transpose(0, 1, 3, 2, 4, 5)   # (N, nth, ntw, 4, 4, C)
+        Bt = jnp.asarray(self.Bt)
+        At = jnp.asarray(self.At)
+        V = jnp.einsum("ab,nhwbcq,dc->nhwadq", Bt, tiles, Bt)  # (N,h,w,4,4,C)
+        V = V.reshape(N * nth * ntw, 16, C).transpose(1, 0, 2)  # (16, T, C)
+        M = jnp.einsum("ktc,kco->kto", V, U)                    # (16, T, O)
+        O_ = M.shape[-1]
+        M = M.transpose(1, 0, 2).reshape(N, nth, ntw, 4, 4, O_)
+        Y = jnp.einsum("ab,nhwbcq,dc->nhwadq", At, M, At)       # (N,h,w,2,2,O)
+        Y = Y.transpose(0, 1, 3, 2, 4, 5).reshape(N, nth * 2, ntw * 2, O_)
+        Y = Y[:, :H, :W_, :]
+        if "b" in w:
+            Y = Y + w["b"]
+        return Y
+
+
+# ---------------------------------------------------------------------------
+# stateless units (attention core, pooling, activations…): execute only
+# ---------------------------------------------------------------------------
+class StatelessKernel(Kernel):
+    name = "fn"
+    op_type = "stateless"
+
+    def __init__(self, fn: Callable, name: str = "fn"):
+        self.fn = fn
+        self.name = name
+
+    def execute(self, w, x, spec):
+        return self.fn(x)
+
+
+KERNEL_REGISTRY: Dict[str, List[Kernel]] = {
+    "linear": [LinearDirect(), LinearPacked()],
+    "conv2d": [ConvDirect(), ConvIm2col(), ConvWinograd()],
+}
+
+LOSSY_KERNELS: Dict[str, List[Kernel]] = {
+    "linear": [LinearLowPrecision()],
+}
+
+
+def registry_for(op_type: str, *, allow_lossy: bool = False) -> List[Kernel]:
+    ks = list(KERNEL_REGISTRY.get(op_type, []))
+    if allow_lossy:
+        ks += LOSSY_KERNELS.get(op_type, [])
+    return ks

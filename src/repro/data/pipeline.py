@@ -1,0 +1,69 @@
+"""Data pipeline: deterministic synthetic token/embedding streams with the
+microbatched layout the train step expects, placed with the batch sharding.
+
+Real deployments swap ``SyntheticPipeline`` for a file-backed loader with the
+same ``__iter__`` contract; everything downstream (sharding, microbatch
+layout, modality handling) is identical.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def make_batch_shape(cfg: ArchConfig, batch: int, seq: int,
+                     microbatches: int = 1) -> Dict[str, tuple]:
+    def lead(*dims):
+        if microbatches > 1:
+            return (microbatches, batch // microbatches, *dims)
+        return (batch, *dims)
+
+    if cfg.input_mode == "tokens":
+        return {"tokens": lead(seq)}
+    if cfg.input_mode == "embeddings":
+        return {"embeds": lead(seq, cfg.d_model), "labels": lead(seq)}
+    return {"tokens": lead(seq - cfg.num_prefix_embeds),
+            "prefix_embeds": lead(cfg.num_prefix_embeds, cfg.d_model)}
+
+
+class SyntheticPipeline:
+    """Deterministic per-step batches (seeded); optional device placement."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, *,
+                 microbatches: int = 1, seed: int = 0,
+                 shardings: Optional[Dict] = None):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.microbatches = microbatches
+        self.seed = seed
+        self.shardings = shardings
+        self._shapes = make_batch_shape(cfg, batch, seq, microbatches)
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        out = {}
+        for k, shape in self._shapes.items():
+            if k == "tokens" or k == "labels":
+                a = rng.integers(0, self.cfg.vocab_size, size=shape,
+                                 dtype=np.int32)
+            else:
+                a = rng.standard_normal(shape).astype(np.float32)
+            arr = jnp.asarray(a) if k in ("tokens", "labels") else \
+                jnp.asarray(a, jnp.dtype(self.cfg.dtype))
+            if self.shardings and k in self.shardings:
+                arr = jax.device_put(arr, self.shardings[k])
+            out[k] = arr
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

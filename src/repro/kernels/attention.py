@@ -1,0 +1,206 @@
+"""Flash-attention Pallas kernels (prefill + decode).
+
+Prefill: grid (B, H, Sq/bq, Sk/bk), online softmax with (m, l, acc) VMEM
+scratch persisted over the innermost (kv) grid axis — scores never leave
+VMEM, which is exactly what removes the O(S²) HBM traffic the jnp
+``chunked_attention`` baseline pays (see EXPERIMENTS.md §Perf).
+
+Decode: grid (B, S/bs) with H folded into the block — one new token against
+a long cache, GQA-aware.
+
+Supports causal masking, sliding windows (local attention), logit softcap
+(gemma2), and GQA via kv-head index mapping. Validated in interpret mode
+against ref.flash_attention_ref / ref.decode_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, nk: int, bq: int, bk: int,
+               causal: bool, window, softcap):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                      # (bq, D)
+    k = k_ref[0, 0]                      # (bk, D)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                            # (bq, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, D)
+    k: jax.Array,   # (B, S, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qt = q.transpose(0, 2, 1, 3)   # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)   # (B, KV, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+    pad = (-S) % bq
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    grid = (B, H, Sp // bq, Sp // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, nk=grid[3], bq=bq, bk=bk,
+            causal=causal, window=window, softcap=softcap,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :S].transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# decode: one token vs a long cache
+# ---------------------------------------------------------------------------
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, nk: int, bs: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                          # (H, D)
+    k = k_ref[0]                          # (bs, D)  (kv head folded upstream)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                             # (H, bs)
+    cols = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = cols < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,       # (B, H, D)
+    k: jax.Array,       # (B, S, KV, D)
+    v: jax.Array,
+    length: jax.Array,  # (B,) valid prefix length
+    *,
+    bs: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """GQA decode attention: each kv-head group handled as its own batch row
+    (q reshaped to (B·KV, H/KV, D), cache to (B·KV, S, D))."""
+    B, S, KV, D = k.shape
+    H = q.shape[1]
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, g, D).reshape(B * KV, g, D)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    lg = jnp.repeat(length, KV)
+    pad = (-S) % bs
+    if pad:
+        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    grid = (B * KV, Sp // bs)
+    out = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, nk=grid[1], bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lg.astype(jnp.int32), qg, kg, vg)
+    return out.reshape(B, KV, g, D).reshape(B, H, D)

@@ -1,0 +1,67 @@
+"""Winograd F(2x2,3x3) tile-matmul Pallas kernel.
+
+The winograd transform turns a 3x3/s1 conv into 16 independent (T, C)x(C, O)
+matmuls over 4x4 input tiles (T = N·⌈H/2⌉·⌈W/2⌉). The input/output tile
+transforms are cheap elementwise/small-matrix work; the 16 batched matmuls
+are the MXU hot spot this kernel owns. The filter-side transform
+(O,I,3,3)->(16,I,O) is the paper's flagship *weights transformation* (done
+offline / on little cores / cached to disk — see ConvWinograd in
+repro.core.registry).
+
+Validated in interpret mode against ref.winograd_tile_matmul_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wino_mm_kernel(v_ref, u_ref, o_ref, acc_ref, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        v_ref[0], u_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def winograd_tile_matmul(
+    V: jax.Array,   # (16, T, C) transformed input tiles
+    U: jax.Array,   # (16, C, O) transformed filters (the cached weights)
+    *,
+    bt: int = 128, bc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    K16, T, C = V.shape
+    _, _, O = U.shape
+    pad_t, pad_c = (-T) % bt, (-C) % bc
+    if pad_t or pad_c:
+        V = jnp.pad(V, ((0, 0), (0, pad_t), (0, pad_c)))
+    if pad_c:
+        U = jnp.pad(U, ((0, 0), (0, pad_c), (0, 0)))
+    Tp, Cp = T + pad_t, C + pad_c
+    grid = (K16, Tp // bt, Cp // bc)
+    out = pl.pallas_call(
+        functools.partial(_wino_mm_kernel, nc=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda k, t, c: (k, t, c)),
+            pl.BlockSpec((1, bc, O), lambda k, t, c: (k, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, O), lambda k, t, c: (k, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((K16, Tp, O), V.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, O), jnp.float32)],
+        interpret=interpret,
+    )(V, U)
+    return out[:, :T]

@@ -1,0 +1,64 @@
+"""Grouped matmul (gmm) Pallas kernel — the MoE expert-block GEMM.
+
+Operates on capacity-blocked expert batches: x (E, C, d) — expert-sorted
+tokens gathered into fixed-capacity blocks (exactly what
+``repro.models.moe._gffn_blocks`` forms) — times per-expert weights
+(E, d, n), giving (E, C, n). Grid (E, C/bc, n/bn, d/bk) with an f32 VMEM
+accumulator; the per-expert weight tile load is a contiguous block, the
+megablox-style mapping of MoE onto the MXU.
+
+Validated in interpret mode against ref.gmm_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm_blocks(
+    x: jax.Array,   # (E, C, d) capacity-blocked expert inputs
+    w: jax.Array,   # (E, d, n) per-expert weights
+    *,
+    bc: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, d = x.shape
+    _, _, n = w.shape
+    pad_c, pad_k, pad_n = (-C) % bc, (-d) % bk, (-n) % bn
+    if pad_c or pad_k:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, pad_k)))
+    if pad_k or pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_k), (0, pad_n)))
+    Cp, dp, np_ = C + pad_c, d + pad_k, n + pad_n
+    grid = (E, Cp // bc, np_ // bn, dp // bk)
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, nk=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda e, c, j, k: (e, c, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, c, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bn), lambda e, c, j, k: (e, c, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :C, :n]

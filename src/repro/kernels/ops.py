@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python for correctness validation); on a TPU backend they
+compile natively. ``use_pallas()`` is the switch the model layer consults.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attn
+from repro.kernels import conv_winograd as _wino
+from repro.kernels import matmul as _mm
+from repro.kernels import ssd as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm=128, bn=128, bk=128):
+    return _mm.matmul(x, w, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("K", "N", "bm"))
+def matmul_packed(x, w_packed, K: int, N: int, *, bm=128):
+    return _mm.matmul_packed(x, w_packed, K, N, bm=bm, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    bq=128, bk=128):
+    return _attn.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("bs",))
+def decode_attention(q, k, v, length, *, bs=256):
+    return _attn.decode_attention(q, k, v, length, bs=bs,
+                                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                         interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("bt", "bc"))
+def winograd_tile_matmul(V, U, *, bt=128, bc=128):
+    return _wino.winograd_tile_matmul(V, U, bt=bt, bc=bc,
+                                      interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("bc", "bn", "bk"))
+def gmm_blocks(x, w, *, bc=128, bn=128, bk=128):
+    from repro.kernels import gmm as _gmm
+
+    return _gmm.gmm_blocks(x, w, bc=bc, bn=bn, bk=bk,
+                           interpret=_interpret())

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the ground truth the
+shape/dtype sweep tests assert against (interpret=True on CPU)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_packed_ref(x: jax.Array, w_packed: jax.Array, K: int, N: int) -> jax.Array:
+    """w_packed: (N/bn, K/bk, bk, bn) — unpack then matmul."""
+    nN, nK, bk, bn = w_packed.shape
+    w = w_packed.transpose(1, 2, 0, 3).reshape(nK * bk, nN * bn)[:K, :N]
+    return matmul_ref(x[..., :K], w)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """q,k,v: (B, S, H, D) (kv may have fewer heads — GQA broadcast)."""
+    B, S, H, D = q.shape
+    kvh = k.shape[2]
+    if kvh != H:
+        k = jnp.repeat(k, H // kvh, axis=2)
+        v = jnp.repeat(v, H // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[None, :] <= idx[:, None]
+    if window is not None:
+        mask &= idx[None, :] > idx[:, None] - window
+    s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, D)
+    k: jax.Array,        # (B, S, KV, D)
+    v: jax.Array,
+    length: jax.Array,   # (B,) valid cache length per row
+) -> jax.Array:
+    B, S, KV, D = k.shape
+    H = q.shape[1]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < length[:, None]
+    s = jnp.where(valid[:, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D, *, chunk: int):
+    """Chunked SSD oracle — delegates to the model-layer implementation
+    (itself validated against a naive recurrent scan in tests)."""
+    from repro.models.ssm import ssd_chunked
+
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    return y, state
+
+
+def ssd_naive_ref(x, dt, A, Bm, Cm, D):
+    """O(S·N·P) recurrent oracle (slow, exact)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    Bh = jnp.broadcast_to(Bm.astype(f32)[:, :, 0][:, :, None], (B, S, H, N))
+    Ch = jnp.broadcast_to(Cm.astype(f32)[:, :, 0][:, :, None], (B, S, H, N))
+
+    def step(state, t):
+        xt = x[:, t].astype(f32) * dt[:, t].astype(f32)[..., None]
+        decay = jnp.exp(dt[:, t].astype(f32) * A.astype(f32))
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt, Bh[:, t])
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), f32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, d), w: (E, d, n) -> (E, C, n) batched per-expert matmul."""
+    return jnp.einsum("ecd,edn->ecn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def winograd_tile_matmul_ref(V: jax.Array, U: jax.Array) -> jax.Array:
+    """V: (16, T, C), U: (16, C, O) -> (16, T, O) batched matmul."""
+    return jnp.einsum("ktc,kco->kto", V.astype(jnp.float32),
+                      U.astype(jnp.float32)).astype(V.dtype)

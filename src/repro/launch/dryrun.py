@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (jax locks the device count on first init).
+#   Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers and compiles.
+
+For each pair this lowers the right step function (train_step / prefill_step /
+serve_step) with production shardings, compiles it AOT, prints
+``memory_analysis()`` (proof it fits 16GiB/chip) and ``cost_analysis()``
+(FLOPs/bytes for EXPERIMENTS.md §Roofline), and derives the three roofline
+terms including collective wire bytes parsed from the optimized HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out out.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+from repro.launch import mesh as M
+from repro.launch.presets import (
+    TRAIN_MICROBATCHES, TRAIN_REMAT_GROUP, config_for,
+)
+from repro.launch.specs import decode_state_shape, input_specs, params_shape
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWState, adamw_init
+from repro.roofline.analysis import roofline_terms
+from repro.train import make_train_step
+
+from jax.sharding import PartitionSpec as P
+
+
+def _logits_spec(cfg, mshape, batch, trailing=1):
+    db = SH.batch_axes(mshape)
+    bax = db if batch % SH._axis_size(mshape, db) == 0 and batch > 1 else None
+    vax = "model" if cfg.vocab_size % mshape.get("model", 1) == 0 else None
+    mid = [None] * (trailing - 1)
+    return P(bax, *mid, vax)
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  strategy=None, microbatches=None, donate: bool = True,
+                  flags=None, cfg_overrides=None):
+    """Returns (lowered, meta) for one (arch, shape, mesh) combination.
+
+    flags: runtime_flags.FLAGS overrides applied for this lowering (§Perf).
+    cfg_overrides: dataclasses.replace overrides on the ArchConfig.
+    """
+    from repro.models.runtime_flags import FLAGS
+
+    if flags:
+        FLAGS.update(flags)
+    cfg = config_for(arch, shape_name)
+    if cfg_overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    mshape = M.mesh_shape_dict(mesh)
+    pshape = params_shape(cfg)
+    pspecs = SH.param_specs(pshape, cfg, mshape, strategy)
+    bshape = input_specs(cfg, shape)
+    bspecs = SH.batch_specs(bshape, mshape)
+    named = lambda s: SH.to_named(s, mesh)
+
+    if shape.kind == "train":
+        nmb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+        # per-microbatch batch must still shard over all data axes
+        dsize = 1
+        for a in ("pod", "data"):
+            dsize *= mshape.get(a, 1)
+        while nmb > 1 and (shape.global_batch // nmb) % dsize != 0:
+            nmb //= 2
+        step = make_train_step(
+            cfg, num_microbatches=nmb,
+            remat_group=TRAIN_REMAT_GROUP.get(arch, 1))
+        bshape = input_specs(cfg, shape, microbatches=nmb)
+        bspecs = SH.batch_specs(bshape, mshape, microbatched=nmb > 1)
+        oshape = jax.eval_shape(adamw_init, pshape)
+        ospecs = AdamWState(step=P(), m=pspecs, v=pspecs)
+        jitted = jax.jit(
+            step,
+            in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+            out_shardings=(named(pspecs), named(ospecs), None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(pshape, oshape, bshape)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, _aux, (cache, _mask) = T.forward(
+                params, batch, cfg, collect_cache=True
+            )
+            return logits[:, -1], cache
+
+        cshape = jax.eval_shape(prefill_step, pshape, bshape)[1]
+        cspecs = SH.prefill_cache_specs(cshape, cfg, mshape)
+        out_specs = (_logits_spec(cfg, mshape, shape.global_batch), cspecs)
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(named(pspecs), named(bspecs)),
+            out_shardings=(named(out_specs[0]), named(out_specs[1])),
+        )
+        with mesh:
+            lowered = jitted.lower(pshape, bshape)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+
+    else:  # decode
+        sshape = decode_state_shape(cfg, shape.global_batch, shape.seq_len)
+        sspecs = SH.decode_state_specs(sshape, cfg, mshape)
+
+        def serve_step(params, state, batch, pos):
+            return T.decode_step(params, state, batch, pos, cfg)
+
+        out_specs = (
+            _logits_spec(cfg, mshape, shape.global_batch, trailing=2),
+            sspecs,
+        )
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(named(pspecs), named(sspecs), named(bspecs), None),
+            out_shardings=(named(out_specs[0]), named(out_specs[1])),
+            donate_argnums=(1,) if donate else (),
+        )
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            lowered = jitted.lower(pshape, sshape, bshape, pos)
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+
+    meta = dict(
+        cfg=cfg, mesh=mesh, mesh_name="2x16x16" if multi_pod else "16x16",
+        chips=mesh.devices.size, model_flops=model_flops,
+    )
+    return lowered, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True, strategy=None, microbatches=None,
+            flags=None, cfg_overrides=None):
+    t0 = time.time()
+    lowered, meta = build_lowered(
+        arch, shape_name, multi_pod=multi_pod, strategy=strategy,
+        microbatches=microbatches, flags=flags, cfg_overrides=cfg_overrides,
+    )
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    from repro.roofline.hlo_cost import f32_carry_artifact_bytes
+
+    artifact = f32_carry_artifact_bytes(hlo)
+    peak_tpu = peak - artifact
+    report = roofline_terms(
+        arch=arch, shape=shape_name, mesh_name=meta["mesh_name"],
+        chips=meta["chips"], hlo_text=hlo,
+        model_flops=meta["model_flops"],
+        peak_flops=M.PEAK_FLOPS_BF16, hbm_bw=M.HBM_BW, link_bw=M.ICI_BW,
+        peak_memory_bytes=float(peak),
+    )
+    out = report.to_dict()
+    out.update(
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        arg_bytes=mem.argument_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        out_bytes=mem.output_size_in_bytes,
+        alias_bytes=mem.alias_size_in_bytes,
+        cpu_f32_artifact_bytes=float(artifact),
+        peak_tpu_bytes=float(peak_tpu),
+        fits_hbm=bool(peak_tpu <= M.HBM_PER_CHIP),
+        fits_hbm_raw_cpu=bool(peak <= M.HBM_PER_CHIP),
+    )
+    if verbose:
+        print(f"== {arch} × {shape_name} × {meta['mesh_name']} "
+              f"({meta['chips']} chips) ==")
+        print(f"  memory_analysis: {mem}")
+        print(f"  peak bytes/device: {peak/2**30:.2f} GiB raw-CPU; "
+              f"{peak_tpu/2**30:.2f} GiB TPU-projected "
+              f"(f32-carry artifact {artifact/2**30:.2f} GiB) "
+              f"({'FITS' if out['fits_hbm'] else 'EXCEEDS'} 16 GiB)")
+        print(f"  flops/device={report.flops_per_device:.3e} "
+              f"hbm_bytes={report.hbm_bytes_per_device:.3e} "
+              f"wire_bytes={report.wire_bytes_per_device:.3e}")
+        print(f"  roofline: compute={report.compute_s*1e3:.2f}ms "
+              f"memory={report.memory_s*1e3:.2f}ms "
+              f"collective={report.collective_s*1e3:.2f}ms "
+              f"-> bottleneck={report.bottleneck}")
+        print(f"  useful_flops_ratio={report.useful_flops_ratio:.3f} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    results.append(run_one(arch, shape, multi_pod=mp))
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    failures.append(dict(
+                        arch=arch, shape=shape,
+                        mesh="2x16x16" if mp else "16x16", error=str(e)[:500],
+                    ))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("FAIL:", f_["arch"], f_["shape"], f_["mesh"], f_["error"][:200])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production meshes.
+
+``make_production_mesh`` is a function (never a module-level constant) so that
+importing this module never touches jax device state. The dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; nothing else in the codebase does.
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod, 2 pods = 512.
+Axes: ``data`` (batch / FSDP), ``model`` (tensor parallel), ``pod`` (composed
+with ``data`` for batch sharding; crossing DCN/ICI between pods).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Tiny mesh over however many devices exist — used by smoke tests."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def mesh_shape_dict(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per chip, 1-link model)
+HBM_PER_CHIP = 16 * 1024**3    # 16 GiB

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero device allocation. Used by the dry-run and the launchers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, microbatches: int = 1) -> dict:
+    """Batch pytree for one step of the given kind (train/prefill/decode).
+
+    For training with microbatches > 1 the leaves get a leading
+    (microbatches, B/microbatches, ...) layout — see train/step.py.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        def lead(*dims, dtype):
+            if microbatches > 1:
+                assert B % microbatches == 0, (B, microbatches)
+                return jax.ShapeDtypeStruct(
+                    (microbatches, B // microbatches, *dims), dtype)
+            return jax.ShapeDtypeStruct((B, *dims), dtype)
+
+        if cfg.input_mode == "tokens":
+            return {"tokens": lead(S, dtype=jnp.int32)}
+        if cfg.input_mode == "embeddings":
+            return {
+                "embeds": lead(S, cfg.d_model, dtype=dt),
+                "labels": lead(S, dtype=jnp.int32),
+            }
+        if cfg.input_mode == "vlm":
+            P = cfg.num_prefix_embeds
+            return {
+                "tokens": lead(S - P, dtype=jnp.int32),
+                "prefix_embeds": lead(P, cfg.d_model, dtype=dt),
+            }
+        raise ValueError(cfg.input_mode)
+    # decode: one new token against a seq_len-deep cache
+    if cfg.input_mode == "embeddings":
+        return {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def params_shape(cfg: ArchConfig):
+    from repro.models import transformer as T
+
+    return jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def decode_state_shape(cfg: ArchConfig, batch: int, context_len: int):
+    from repro.models import transformer as T
+
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, context_len)
+    )

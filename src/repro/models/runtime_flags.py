@@ -1,0 +1,27 @@
+"""Execution-strategy flags (not architecture config): toggled by the
+dry-run/benchmarks to compare baseline vs optimized lowerings (§Perf)."""
+
+FLAGS = {
+    # shard_map flash-decoding for sequence-sharded KV caches: partial
+    # softmax per seq shard + tiny (B,H,hd) psum combine, instead of letting
+    # XLA all-gather the full cache per layer. Default ON (it is the correct
+    # TPU-native design); the §Perf baseline measurements set it to False.
+    "decode_flash": True,
+    # sequence-parallel attention (shard_map): when an arch's head count
+    # doesn't divide the model axis (smollm 15H, granite 24H/8KV, musicgen
+    # 24H), baseline TP replicates the whole attention computation on every
+    # model shard. With seqpar the query sequence dim is sharded over
+    # `model` (K/V stay full — they are GQA-small), cutting per-device
+    # attention compute and score memory by the model-axis size.
+    # OFF by default: it is a §Perf hillclimb change, measured against the
+    # replicated baseline in EXPERIMENTS.md.
+    "seqpar_attn": False,
+    # larger online-softmax chunk for long prefill (reduces the number of
+    # (m,l,acc) carry read/write sweeps); §Perf knob.
+    "attn_chunk": 1024,
+    # int8-quantized KV cache (per-entry-per-head absmax scales): halves
+    # cache HBM residency and reads vs bf16 for the decode pairs. Lossy
+    # (standard serving practice) — OFF by default; a §Perf iteration.
+    # Uniform-attention families only.
+    "kv_cache_int8": False,
+}

@@ -1,0 +1,297 @@
+"""Sharding rules: map every parameter / activation / cache to a PartitionSpec.
+
+Logical dimension kinds are resolved per-leaf from the parameter name, then
+mapped to mesh axes by a *strategy* table. The baseline strategy is
+megatron-style tensor parallelism on the ``model`` axis + FSDP (ZeRO-3-like)
+sharding of the other matrix dimension over the batch axes; XLA SPMD inserts
+the all-gathers. Alternative strategies (used by the §Perf hillclimb) override
+individual kind→axis entries, e.g. expert-parallel MoE.
+
+Divisibility is checked per leaf: a dim that does not divide evenly over the
+assigned axes falls back to replication (e.g. smollm's 15 query heads, or
+granite's 49155 vocab on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Axis = Any  # None | str | tuple[str, ...]
+
+
+# name -> logical kinds of the trailing dims (leading stack dims padded None)
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("vocab", "dm"),
+    "lm_head": ("dm", "vocab"),
+    "wq": ("dm", "q_heads"),
+    "wk": ("dm", "kv_heads"),
+    "wv": ("dm", "kv_heads"),
+    "wo": ("q_heads", "dm"),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "ln1": (None,),
+    "ln2": (None,),
+    "final_norm": (None,),
+    "router": ("dm", None),
+    # dense mlp (2D) and moe experts (3D) share names; disambiguated by ndim
+    "w_gate": ("dm", "ff"),
+    "w_up": ("dm", "ff"),
+    "w_down": ("ff", "dm"),
+    "w_gate@moe": ("exp", "dm", "ff"),
+    "w_up@moe": ("exp", "dm", "ff"),
+    "w_down@moe": ("exp", "ff", "dm"),
+    # mamba
+    "in_x": ("dm", "inner"),
+    "in_z": ("dm", "inner"),
+    "in_B": ("dm", None),
+    "in_C": ("dm", None),
+    "in_dt": ("dm", "sheads"),
+    "conv_x": (None, "inner"),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "A_log": ("sheads",),
+    "D": ("sheads",),
+    "dt_bias": ("sheads",),
+    "gate_norm": ("inner",),
+    "out": ("inner", "dm"),
+}
+
+
+def default_strategy(
+    *,
+    fsdp_axes: Optional[Tuple[str, ...]] = ("data",),
+    model_axis: str = "model",
+) -> Dict[str, Axis]:
+    return {
+        "dm": fsdp_axes,
+        "vocab": model_axis,
+        "q_heads": model_axis,
+        "kv_heads": model_axis,
+        "ff": model_axis,
+        "exp": None,
+        "inner": model_axis,
+        "sheads": model_axis,
+    }
+
+
+def _axis_size(mesh_shape: Dict[str, int], axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh_shape.get(axis, 1)
+    return math.prod(mesh_shape.get(a, 1) for a in axis)
+
+
+def _head_aligned(kind: Optional[str], cfg: ArchConfig, dim: int, shards: int) -> bool:
+    """Sharding must not split a head for head-structured dims."""
+    if shards <= 1:
+        return True
+    if dim % shards != 0:
+        return False
+    heads = {
+        "q_heads": cfg.num_heads,
+        "kv_heads": cfg.num_kv_heads,
+        "inner": cfg.ssm_heads if cfg.ssm_state else 0,
+        "sheads": cfg.ssm_heads if cfg.ssm_state else 0,
+    }.get(kind)
+    if heads:
+        return heads % shards == 0
+    return True
+
+
+def spec_for(
+    name: str,
+    shape: Tuple[int, ...],
+    cfg: ArchConfig,
+    mesh_shape: Dict[str, int],
+    strategy: Dict[str, Axis],
+    *,
+    in_moe: bool = False,
+) -> P:
+    key = f"{name}@moe" if in_moe and f"{name}@moe" in _RULES and len(shape) >= 3 else name
+    kinds = _RULES.get(key)
+    if kinds is None:
+        return P()
+    pad = len(shape) - len(kinds)
+    assert pad >= 0, (name, shape, kinds)
+    axes: list[Axis] = [None] * pad
+    for kind, dim in zip(kinds, shape[pad:]):
+        ax = strategy.get(kind) if kind else None
+        if ax is not None:
+            size = _axis_size(mesh_shape, ax)
+            if not _head_aligned(kind, cfg, dim, size):
+                ax = None
+        axes.append(ax)
+    return P(*axes)
+
+
+def param_specs(
+    params_shape: Any,
+    cfg: ArchConfig,
+    mesh_shape: Dict[str, int],
+    strategy: Optional[Dict[str, Axis]] = None,
+) -> Any:
+    """PartitionSpec pytree matching ``jax.eval_shape(init_params)`` output."""
+    strategy = strategy or default_strategy()
+
+    def leaf(path, x):
+        name = None
+        in_moe = False
+        for k in path:
+            if isinstance(k, jax.tree_util.DictKey):
+                if k.key == "moe":
+                    in_moe = True
+                name = k.key
+        return spec_for(name, x.shape, cfg, mesh_shape, strategy, in_moe=in_moe)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / decode state
+# ---------------------------------------------------------------------------
+def batch_axes(mesh_shape: Dict[str, int]) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+
+def batch_specs(
+    batch_shape: Any, mesh_shape: Dict[str, int], *, microbatched: bool = False
+) -> Any:
+    """Batch dim sharded over the data axes. With ``microbatched`` the leaves
+    are (n_micro, B/n_micro, ...) and the *second* dim is the batch dim."""
+    db = batch_axes(mesh_shape)
+    bdim = 1 if microbatched else 0
+
+    def leaf(x):
+        B = x.shape[bdim]
+        ax = db if B % _axis_size(mesh_shape, db) == 0 else None
+        axes = [None] * len(x.shape)
+        axes[bdim] = ax
+        return P(*axes)
+
+    return jax.tree.map(leaf, batch_shape)
+
+
+def decode_state_specs(
+    state_shape: Any, cfg: ArchConfig, mesh_shape: Dict[str, int],
+    model_axis: str = "model",
+) -> Any:
+    """Decode caches: batch over data axes when divisible, else the sequence /
+    window dim is sharded over (data×model) flash-decoding style."""
+    db = batch_axes(mesh_shape)
+    dsize = _axis_size(mesh_shape, db)
+    msize = _axis_size(mesh_shape, model_axis)
+
+    def leaf(path, x):
+        name = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)][-1]
+        shape = x.shape
+        if name in ("k_scale", "v_scale"):
+            # (L, B, W, KV): shard like the int8 cache minus the head-dim
+            _, B, W, KV = shape
+            if B % dsize == 0 and dsize > 1:
+                seq_ax = model_axis if W % msize == 0 else None
+                return P(None, db, seq_ax, None)
+            seq_shards = (*db, model_axis)
+            if W % _axis_size(mesh_shape, seq_shards) == 0:
+                return P(None, None, seq_shards, None)
+            return P(None, None, None, None)
+        if name in ("k", "v", "k_local", "v_local", "k_global", "v_global",
+                    "shared_k", "shared_v"):
+            # (L, B, W, KV, hd)
+            _, B, W, KV, hd = shape
+            if B % dsize == 0 and dsize > 1:
+                seq_ax = model_axis if W % msize == 0 else None
+                return P(None, db, seq_ax, None, None)
+            seq_shards = (*db, model_axis)
+            if W % _axis_size(mesh_shape, seq_shards) == 0:
+                return P(None, None, seq_shards, None, None)
+            return P(None, None, None, None, None)
+        if name == "ssm":
+            # (L|G[,every], B, H, P, N)
+            B, H = shape[-4], shape[-3]
+            bax = db if B % dsize == 0 and dsize > 1 else None
+            hax = model_axis if H % msize == 0 else None
+            return P(*([None] * (len(shape) - 4)), bax, hax, None, None)
+        if name.startswith("conv_"):
+            # (L[,every], B, K-1, C)
+            B, C = shape[-3], shape[-1]
+            bax = db if B % dsize == 0 and dsize > 1 else None
+            cax = model_axis if C % msize == 0 else None
+            return P(*([None] * (len(shape) - 3)), bax, None, cax)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)
+
+
+def prefill_cache_specs(
+    cache_shape: Any, cfg: ArchConfig, mesh_shape: Dict[str, int],
+    model_axis: str = "model",
+) -> Any:
+    """Specs for the cache pytree returned by ``forward(collect_cache=True)``.
+
+    KV leaves are (L, B, S, KV, hd); mamba conv states (L, B, K-1, C); ssm
+    states (L, B, H, P, N). KV is sharded batch-over-data and seq-over-model
+    (flash-decoding layout) so a 32k×32-way prefill cache fits per-chip HBM.
+    """
+    db = batch_axes(mesh_shape)
+    dsize = _axis_size(mesh_shape, db)
+    msize = _axis_size(mesh_shape, model_axis)
+
+    def leaf(path, x):
+        names = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+        shape = x.shape
+        if names and names[0] == "mamba":
+            if len(shape) == 5:  # ssm state (L,B,H,P,N)
+                B, H = shape[1], shape[2]
+                return P(None,
+                         db if B % dsize == 0 and dsize > 1 else None,
+                         model_axis if H % msize == 0 else None, None, None)
+            # conv state (L,B,K-1,C)
+            B, C = shape[1], shape[3]
+            return P(None,
+                     db if B % dsize == 0 and dsize > 1 else None,
+                     None, model_axis if C % msize == 0 else None)
+        # kv: (L, B, S, KV, hd)
+        _, B, S = shape[0], shape[1], shape[2]
+        bax = db if B % dsize == 0 and dsize > 1 else None
+        sax = model_axis if S % msize == 0 else None
+        return P(None, bax, sax, None, None)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """with_sharding_constraint(P(batch_axes, None, ...)) on dim 0, resolving
+    the mesh from the ambient context; no-op outside a mesh (CPU tests) or
+    when the batch dim doesn't divide. Re-anchors batch sharding after ops
+    whose SPMD propagation drops it (e.g. the embedding gather)."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty:
+            return x
+        names = m.shape  # OrderedDict axis->size
+    except Exception:
+        return x
+    db = tuple(a for a in ("pod", "data") if a in names)
+    if not db:
+        return x
+    size = math.prod(names[a] for a in db)
+    if size <= 1 or x.shape[0] % size != 0:
+        return x
+    spec = P(db, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def to_named(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Sequence mode uses the chunked SSD algorithm (block-diagonal intra-chunk
+attention-like term + low-rank inter-chunk state recurrence) scanned over
+chunks with ``lax.scan`` so live memory is O(S/chunk * chunk^2) per head —
+this is also the structure the Pallas kernel in ``repro.kernels.ssd``
+implements on-TPU. Decode mode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """x: (B, S, C); w: (K, C). Returns (y, new_state=(B, K-1, C))."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, k : k + S] * w[k] for k in range(K))
+    return y, xp[:, S:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)  post-softplus
+    A: jax.Array,    # (H,)  negative
+    Bm: jax.Array,   # (B, S, G, N)
+    Cm: jax.Array,   # (B, S, G, N)
+    D: jax.Array,    # (H,)
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B, nc, chunk, G, N)
+    Cc = Cm.reshape(B, nc, chunk, G, N)
+    # broadcast groups over heads
+    hpg = H // G
+    a = dtc * A.astype(f32)                      # (B, nc, Q, H) log-decay
+    cum = jnp.cumsum(a, axis=2)                  # within-chunk cumulative
+
+    xs = jnp.moveaxis(xc, 1, 0)    # (nc, B, Q, H, P)
+    dts = jnp.moveaxis(dtc, 1, 0)
+    Bs = jnp.moveaxis(Bc, 1, 0)
+    Cs = jnp.moveaxis(Cc, 1, 0)
+    cums = jnp.moveaxis(cum, 1, 0)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), f32)
+
+    def body(state, inp):
+        x_, dt_, B_, C_, cum_ = inp  # per-chunk slices
+        Q = x_.shape[1]
+        # heads -> groups index
+        Bh = jnp.repeat(B_, hpg, axis=2) if G > 1 else B_[:, :, 0]
+        Ch = jnp.repeat(C_, hpg, axis=2) if G > 1 else C_[:, :, 0]
+        if G > 1:  # (B,Q,H,N)
+            pass
+        else:      # (B,Q,N) shared across heads
+            Bh = Bh[:, :, None, :].astype(f32)
+            Ch = Ch[:, :, None, :].astype(f32)
+            Bh = jnp.broadcast_to(Bh, (B, Q, H, N))
+            Ch = jnp.broadcast_to(Ch, (B, Q, H, N))
+        xdt = x_.astype(f32) * dt_[..., None]    # (B,Q,H,P)
+
+        # --- intra-chunk (quadratic within chunk) --------------------------
+        # L[i,j] = exp(cum_i - cum_j) for i >= j
+        diff = cum_[:, :, None, :] - cum_[:, None, :, :]      # (B,Qi,Qj,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)            # (B,Qi,Qj,H)
+        y_diag = jnp.einsum("bijh,bijh,bjhp->bihp", CB, Lmat, xdt)
+
+        # --- inter-chunk state ---------------------------------------------
+        last = cum_[:, -1:, :]                                # (B,1,H)
+        decay_out = jnp.exp(last - cum_)                      # (B,Q,H)
+        new_contrib = jnp.einsum("bjhn,bjh,bjhp->bhpn", Bh, decay_out, xdt)
+        chunk_decay = jnp.exp(last[:, 0])                     # (B,H)
+        y_off = jnp.einsum("bihn,bhpn,bih->bihp", Ch, state, jnp.exp(cum_))
+        state = state * chunk_decay[..., None, None] + new_contrib
+        y = y_diag + y_off
+        return state, y
+
+    state, ys = jax.lax.scan(body, init_state, (xs, dts, Bs, Cs, cums))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(
+    x: jax.Array,    # (B, H, P)
+    dt: jax.Array,   # (B, H)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B, G, N)
+    Cm: jax.Array,   # (B, G, N)
+    D: jax.Array,    # (H,)
+    state: jax.Array,  # (B, H, P, N) f32
+):
+    f32 = jnp.float32
+    B_, H, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[2]
+    Bh = jnp.broadcast_to(Bm[:, 0][:, None].astype(f32), (B_, H, N)) if G == 1 \
+        else jnp.repeat(Bm.astype(f32), H // G, axis=1)
+    Ch = jnp.broadcast_to(Cm[:, 0][:, None].astype(f32), (B_, H, N)) if G == 1 \
+        else jnp.repeat(Cm.astype(f32), H // G, axis=1)
+    dtf = dt.astype(f32)
+    decay = jnp.exp(dtf * A.astype(f32))                     # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", x.astype(f32) * dtf[..., None], Bh)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    K = cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    return {
+        "in_x": _dense_init(ks[0], (d, di), dt),
+        "in_z": _dense_init(ks[1], (d, di), dt),
+        "in_B": _dense_init(ks[2], (d, N), dt),
+        "in_C": _dense_init(ks[3], (d, N), dt),
+        "in_dt": _dense_init(ks[4], (d, H), dt),
+        "conv_x": (jax.random.normal(ks[5], (K, di), jnp.float32) / math.sqrt(K)).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (K, N), jnp.float32) / math.sqrt(K)).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (K, N), jnp.float32) / math.sqrt(K)).astype(dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "gate_norm": jnp.zeros((di,), dt),
+        "out": _dense_init(ks[8], (di, d), dt),
+    }
+
+
+def mamba_apply_seq(p: dict, x: jax.Array, cfg, conv_states=None, ssm_state=None):
+    """Sequence mode. Returns (y, (conv_states, ssm_state))."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ p["in_z"]
+    xi = x @ p["in_x"]
+    Bm = x @ p["in_B"]
+    Cm = x @ p["in_C"]
+    dtr = x @ p["in_dt"]
+    cs = conv_states or (None, None, None)
+    xi, sx = causal_conv(xi, p["conv_x"], cs[0])
+    Bm, sB = causal_conv(Bm, p["conv_B"], cs[1])
+    Cm, sC = causal_conv(Cm, p["conv_C"], cs[2])
+    xi, Bm, Cm = jax.nn.silu(xi), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(
+        xi.reshape(B, S, H, P), dt, A,
+        Bm[:, :, None, :], Cm[:, :, None, :], p["D"],
+        chunk=cfg.ssm_chunk, init_state=ssm_state,
+    )
+    y = y.reshape(B, S, cfg.ssm_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out"], ((sx, sB, sC), state)
+
+
+def mamba_decode_step(p: dict, x: jax.Array, cfg, conv_states, ssm_state):
+    """x: (B, 1, d). Returns (y (B,1,d), (conv_states, ssm_state))."""
+    B = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z = x @ p["in_z"]
+    xi = x @ p["in_x"]
+    Bm = x @ p["in_B"]
+    Cm = x @ p["in_C"]
+    dtr = x @ p["in_dt"]
+    xi, sx = causal_conv(xi, p["conv_x"], conv_states[0])
+    Bm, sB = causal_conv(Bm, p["conv_B"], conv_states[1])
+    Cm, sC = causal_conv(Cm, p["conv_C"], conv_states[2])
+    xi, Bm, Cm = jax.nn.silu(xi), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_decode_step(
+        xi[:, 0].reshape(B, H, P), dt, A,
+        Bm[:, 0][:, None, :], Cm[:, 0][:, None, :], p["D"], ssm_state,
+    )
+    y = y.reshape(B, 1, cfg.ssm_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out"], ((sx, sB, sC), state)
+
+
+def mamba_state_init(cfg, batch: int, dtype) -> dict:
+    K = cfg.ssm_conv_width
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.ssm_inner), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,184 @@
+"""Roofline terms derived from a compiled (AOT) executable.
+
+This container is CPU-only; TPU v5e is the *target*. We therefore derive the
+three roofline terms structurally from the compiled artifact:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / link_bw
+
+``cost_analysis()`` on an SPMD-partitioned executable reports *per-device*
+flops and bytes. Collective bytes are not in cost_analysis, so we parse the
+optimized HLO and sum per-op wire-byte estimates using ring-algorithm costs:
+
+  all-gather        : result_bytes × (n-1)/n          (each device receives it)
+  reduce-scatter    : operand_bytes × (n-1)/n
+  all-reduce        : 2 × operand_bytes × (n-1)/n     (RS + AG)
+  all-to-all        : operand_bytes × (n-1)/n
+  collective-permute: operand_bytes
+
+n (participants) is parsed from replica_groups when present, else assumed
+large ((n-1)/n ≈ 1).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# e.g. "  %x = bf16[8,128]{1,0} all-gather(...)" or tuple results
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\((.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _participants(line: str) -> Optional[int]:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota tile format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    op_count: int = 0
+
+    def add(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.op_count += 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:200] and "(" in line:
+            # -done ops carry the same shape as -start; only count one of them
+            if re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)-done", line):
+                continue
+        result_text, kind, operand_text = m.groups()
+        result_b = _shape_bytes(result_text)
+        operand_b = _shape_bytes(operand_text.split("),")[0] + ")")
+        n = _participants(line)
+        frac = (n - 1) / n if n and n > 1 else 1.0
+        if kind == "all-gather":
+            wire = result_b * frac
+        elif kind == "reduce-scatter":
+            wire = operand_b * frac
+        elif kind == "all-reduce":
+            wire = 2.0 * result_b * frac
+        elif kind == "all-to-all":
+            wire = result_b * frac
+        else:  # collective-permute
+            wire = result_b
+        stats.add(kind, wire)
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6 * N_active * tokens (global)
+    useful_flops_ratio: float     # model_flops / (flops_per_device * chips)
+    peak_memory_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    # traffic inside named_scope("flashable_attn") — VMEM-resident under the
+    # Pallas flash kernel; memory_s_flash models the kernel's memory term
+    flashable_hbm_bytes: float = 0.0
+    memory_s_flash: float = 0.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    hlo_text: str,
+    model_flops: float,
+    peak_flops: float,
+    hbm_bw: float,
+    link_bw: float,
+    peak_memory_bytes: float = 0.0,
+) -> RooflineReport:
+    # loop-aware HLO walk (XLA's cost_analysis ignores while trip counts)
+    from repro.roofline.hlo_cost import analyze
+
+    hc = analyze(hlo_text)
+    flops = hc.flops
+    hbm = hc.hbm_bytes
+
+    class _Coll:  # adapt HloCost to the summary fields below
+        wire_bytes = hc.wire_bytes
+        by_kind = hc.wire_by_kind
+
+    coll = _Coll()
+    compute_s = flops / peak_flops
+    memory_s = hbm / hbm_bw
+    collective_s = coll.wire_bytes / link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_hw_flops = flops * chips
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm,
+        wire_bytes_per_device=coll.wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / total_hw_flops) if total_hw_flops else 0.0,
+        peak_memory_bytes=peak_memory_bytes,
+        collective_by_kind=dict(coll.by_kind),
+        flashable_hbm_bytes=hc.flashable_hbm,
+        memory_s_flash=(hbm - hc.flashable_hbm) / hbm_bw,
+    )

@@ -1,0 +1,550 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once,
+ignoring trip counts — useless for scan-over-layers programs where ~all
+compute lives inside loops. This module re-derives per-device costs by
+walking the HLO computation graph:
+
+  flops       : 2·|out|·K for dots (K = contracted extent), |out| for
+                elementwise ops, window-aware for convolutions;
+  hbm bytes   : per top-level instruction, operands + results (fusion
+                internals are free — they never touch HBM);
+  wire bytes  : ring-cost model per collective (see analysis.py);
+
+each weighted by the product of enclosing while-loop trip counts. Trip
+counts are parsed from the loop condition's ROOT compare constant.
+
+Validated against ``cost_analysis()`` on loop-free programs (tests).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "negate", "abs", "rsqrt", "sqrt", "select",
+    "compare", "and", "or", "not", "convert", "floor", "ceil", "sign",
+    "cosine", "sine", "logistic", "clamp", "remainder", "atan2", "expm1",
+    "log1p", "cbrt",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _bytes_of(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt in _DTYPE_BYTES and dt != "token":
+            total += _shape_elems(dims)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str            # raw result-shape text
+    op: str
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_INSTR_HEAD_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SCALAR_SHAPE_RE = re.compile(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?")
+_OP_NAME_RE = re.compile(r"([\w\-]+)\((.*)$")
+
+
+def _split_shape_op(rest: str):
+    """Split '<shape> <op>(<operands...>' handling nested tuple shapes."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape, tail = rest[: end + 1], rest[end + 1:].lstrip()
+    else:
+        m = _SCALAR_SHAPE_RE.match(rest)
+        if not m:
+            return None
+        shape, tail = m.group(0), rest[m.end():].lstrip()
+    m = _OP_NAME_RE.match(tail)
+    if not m:
+        return None
+    return shape, m.group(1), m.group(2)
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m and ("->" in line or line.strip().startswith(("ENTRY", "%"))) and line.endswith("{"):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_HEAD_RE.match(line)
+        if not m:
+            continue
+        root, name, remainder = m.groups()
+        parsed = _split_shape_op(remainder)
+        if parsed is None:
+            continue
+        shape, op, rest = parsed
+        # operand names: the %refs inside the parens before any attr section
+        paren = rest.split("), ")[0]
+        operands = _OPERAND_RE.findall(paren)
+        ins = Instr(name=name, shape=shape, op=op, operands=operands,
+                    line=line, is_root=bool(root))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Parse the loop bound from the condition computation.
+
+    Scan-lowered conditions compare the induction variable against a scalar
+    constant (possibly via a wrapped fusion), with init 0 / step 1, so the
+    largest scalar integer constant in the condition is the trip count."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.shape.startswith(("s32[]", "s64[]", "u32[]", "u64[]")):
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = _elems_of(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    if not m or not instr.operands:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = comp.by_name.get(instr.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    sm = _SHAPE_RE.search(lhs.shape)
+    if not sm:
+        return 2.0 * out_elems
+    ldims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    K = 1
+    for c in cdims:
+        if c < len(ldims):
+            K *= ldims[c]
+    return 2.0 * out_elems * K
+
+
+def _conv_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = _elems_of(instr.shape)
+    if len(instr.operands) < 2:
+        return 2.0 * out_elems
+    rhs = comp.by_name.get(instr.operands[1])
+    if rhs is None:
+        return 2.0 * out_elems
+    sm = _SHAPE_RE.search(rhs.shape)
+    kdims = [int(d) for d in sm.group(2).split(",")] if sm and sm.group(2) else []
+    kernel_elems = math.prod(kdims) if kdims else 1
+    # flops ~= 2 * out_elems * kernel_elems / out_channels
+    if not kdims:
+        return 2.0 * out_elems
+    # kernel shape already holds ic/groups on its input-feature dim, so
+    # flops = 2 * out_elems * (spatial * ic/groups) = 2*out*kernel_elems/oc
+    m = re.search(r"dim_labels=([\w?]+)_([\w?]+)->", instr.line)
+    oc = 1
+    if m:
+        rhs_labels = m.group(2)
+        if "o" in rhs_labels and rhs_labels.index("o") < len(kdims):
+            oc = kdims[rhs_labels.index("o")]
+    return 2.0 * out_elems * kernel_elems / max(oc, 1)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_kind: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+    hbm_contrib: Dict[str, float] = field(default_factory=dict)
+    flop_contrib: Dict[str, float] = field(default_factory=dict)
+    # HBM traffic inside jax.named_scope("flashable_attn") regions — buffers
+    # the Pallas flash-attention kernel keeps in VMEM on TPU
+    flashable_hbm: float = 0.0
+
+    def top_hbm(self, n=10):
+        return sorted(self.hbm_contrib.items(), key=lambda kv: -kv[1])[:n]
+
+    def top_flops(self, n=10):
+        return sorted(self.flop_contrib.items(), key=lambda kv: -kv[1])[:n]
+
+    def add_wire(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.wire_by_kind[kind] = self.wire_by_kind.get(kind, 0.0) + b
+
+
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _participants(line: str) -> Optional[int]:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def _collective_wire(instr: Instr, comp: Computation) -> Tuple[str, float]:
+    kind = instr.op.replace("-start", "").replace("-done", "")
+    result_b = _bytes_of(instr.shape)
+    n = _participants(instr.line)
+    frac = (n - 1) / n if n and n > 1 else 1.0
+    if kind == "all-reduce":
+        return kind, 2.0 * result_b * frac
+    if kind == "reduce-scatter":
+        # operand is n× the result
+        return kind, result_b * (n - 1 if n else 1.0)
+    if kind == "collective-permute":
+        return kind, float(result_b)
+    return kind, result_b * frac  # all-gather / all-to-all
+
+
+_GTE_IDX_RE = re.compile(r"index=(\d+)")
+
+
+def f32_carry_artifact_bytes(text: str) -> float:
+    """Bytes of f32 while-loop carries that are convert-roundtrips of bf16
+    values — an XLA:CPU artifact: CPU dots convert bf16 operands to f32 and
+    the compiler hoists those converts into the loop carry, materializing an
+    f32 copy of (e.g.) the whole KV cache, the stacked bf16 weights, or the
+    saved residual stack. A TPU compile feeds bf16 to the MXU directly, so
+    these buffers don't exist there.
+
+    Detection: for every while, walk each f32 element of the body's ROOT
+    tuple back to its defining value, following unary ops, fusion roots,
+    get-tuple-element through *nested whiles* (via the inner body root) and
+    through the loop parameter (via the while init tuple in the caller). An
+    element is an artifact iff the chain reaches convert(bf16->f32). Genuine
+    f32 state (optimizer moments, softmax stats) never converts from bf16
+    and is not counted."""
+    comps, _ = parse_hlo(text)
+    # map body-computation name -> (while instr, calling comp)
+    callers: Dict[str, Tuple[Instr, "Computation"]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = _BODY_RE.search(ins.line)
+                if bm:
+                    callers[bm.group(1)] = (ins, comp)
+
+    def resolve(comp: Computation, name: str, depth: int) -> bool:
+        """True if value `name` in `comp` derives from convert(bf16)."""
+        if depth > 12:
+            return False
+        src = comp.by_name.get(name)
+        if src is None:
+            return False
+        if src.op == "convert" and src.operands:
+            prev = comp.by_name.get(src.operands[0])
+            return prev is not None and "bf16[" in prev.shape
+        if src.op in ("copy", "bitcast", "dynamic-update-slice",
+                      "transpose", "reshape"):
+            return bool(src.operands) and resolve(comp, src.operands[0], depth + 1)
+        if src.op == "fusion":
+            m = _CALLS_RE.search(src.line)
+            called = comps.get(m.group(1)) if m else None
+            if called is None:
+                return False
+            froot = next((i for i in called.instrs if i.is_root), None)
+            return froot is not None and resolve(called, froot.name, depth + 1)
+        if src.op == "get-tuple-element" and src.operands:
+            mi = _GTE_IDX_RE.search(src.line)
+            idx = int(mi.group(1)) if mi else 0
+            base = comp.by_name.get(src.operands[0])
+            if base is None:
+                return False
+            if base.op == "while":
+                bm = _BODY_RE.search(base.line)
+                inner = comps.get(bm.group(1)) if bm else None
+                if inner is None:
+                    return False
+                iroot = next((i for i in inner.instrs if i.is_root), None)
+                if iroot is None or iroot.op != "tuple" or idx >= len(iroot.operands):
+                    return False
+                return resolve(inner, iroot.operands[idx], depth + 1)
+            if base.op == "parameter":
+                # loop param: resolve the while INIT value in the caller
+                info = callers.get(comp.name)
+                if info is None:
+                    return False
+                wins, caller = info
+                if not wins.operands:
+                    return False
+                init = caller.by_name.get(wins.operands[0])
+                if init is None or init.op != "tuple" or idx >= len(init.operands):
+                    return False
+                return resolve(caller, init.operands[idx], depth + 1)
+        return False
+
+    total = 0.0
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op != "while":
+                continue
+            bm = _BODY_RE.search(ins.line)
+            body = comps.get(bm.group(1)) if bm else None
+            if body is None:
+                continue
+            root = next((i for i in body.instrs if i.is_root), None)
+            if root is None or root.op != "tuple":
+                continue
+            counted = set()
+            for opn in root.operands:
+                src = body.by_name.get(opn)
+                if (src is None or not src.shape.startswith("f32[")
+                        or opn in counted):
+                    continue
+                if _bytes_of(src.shape) < 64 * 2**20:
+                    continue  # only material buffers
+                if resolve(body, opn, 0):
+                    counted.add(opn)
+                    total += _bytes_of(src.shape)
+    return total
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs)) if comps else None
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    def _acc_hbm(key: str, v: float, line: str = ""):
+        cost.hbm_bytes += v
+        cost.hbm_contrib[key] = cost.hbm_contrib.get(key, 0.0) + v
+        if "flashable_attn" in line:
+            cost.flashable_hbm += v
+
+    def _acc_flops(key: str, v: float):
+        cost.flops += v
+        cost.flop_contrib[key] = cost.flop_contrib.get(key, 0.0) + v
+
+    def visit(comp_name: str, weight: float, in_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                bm = _BODY_RE.search(ins.line)
+                cm = _COND_RE.search(ins.line)
+                trip = _trip_count(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+                if bm and bm.group(1) in comps:
+                    visit(bm.group(1), weight * trip, False)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                m = _CALLS_RE.search(ins.line)
+                called = m.group(1) if m and m.group(1) in comps else None
+                if called:
+                    # flops from inside; hbm only at the fusion boundary
+                    visit(called, weight, True)
+                if not in_fusion:
+                    _acc_hbm(f"fusion {ins.shape[:48]}",
+                             weight * _fusion_hbm(ins, comp, comps.get(called)),
+                             ins.line)
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-]+)", ins.line):
+                    if m.group(1) in comps:
+                        visit(m.group(1), weight, in_fusion)
+                continue
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                kind, wire = _collective_wire(ins, comp)
+                cost.add_wire(kind, weight * wire)
+                if not in_fusion:
+                    _acc_hbm(f"{kind} {ins.shape[:48]}",
+                             weight * _instr_hbm(ins, comp), ins.line)
+                continue
+            if op == "dot":
+                _acc_flops(f"dot {ins.shape[:48]}", weight * _dot_flops(ins, comp))
+            elif op == "convolution":
+                _acc_flops(f"conv {ins.shape[:48]}", weight * _conv_flops(ins, comp))
+            elif op in _ELEMENTWISE:
+                _acc_flops(f"ew {op}", weight * _elems_of(ins.shape))
+                if op in ("exponential", "log", "tanh", "power", "rsqrt",
+                          "sqrt", "logistic", "cosine", "sine"):
+                    cost.transcendentals += weight * _elems_of(ins.shape)
+            elif op == "reduce":
+                _acc_flops("reduce", weight * _elems_of(ins.shape))
+            if not in_fusion and op not in (
+                "parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "after-all",
+            ):
+                _acc_hbm(f"{op} {ins.shape[:48]}",
+                         weight * _instr_hbm(ins, comp), ins.line)
+
+    def _instr_hbm(ins: Instr, comp: Computation) -> float:
+        out_b = _bytes_of(ins.shape)
+        # slicing ops only touch the sliced window, not the whole operand
+        if ins.op in ("dynamic-slice", "slice", "gather"):
+            return float(2 * out_b)
+        if ins.op in ("dynamic-update-slice", "scatter"):
+            upd = comp.by_name.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            upd_b = _bytes_of(upd.shape) if upd is not None else out_b
+            return float(3 * upd_b)  # read+write window + update read
+        b = out_b
+        for opn in ins.operands:
+            src = comp.by_name.get(opn)
+            if src is not None:
+                b += _bytes_of(src.shape)
+        return float(b)
+
+    def _fusion_hbm(ins: Instr, comp: Computation,
+                    called: Optional[Computation]) -> float:
+        """Fusion boundary traffic with slicing/in-place awareness:
+        - a fusion whose ROOT is dynamic-update-slice/scatter writes only the
+          update window (XLA aliases the destination buffer in-place);
+        - operands consumed inside the fusion *only through slicing ops*
+          (dynamic-slice/slice/gather) contribute their windows, not their
+          full extent."""
+        if called is None:
+            return float(_bytes_of(ins.shape)) + sum(
+                _bytes_of(comp.by_name[o].shape)
+                for o in ins.operands if o in comp.by_name
+            )
+        root = next((i for i in called.instrs if i.is_root), None)
+        # see through unary-root wrappers (XLA-CPU inserts f32<->bf16 convert
+        # roundtrips around loop-carry updates that a TPU compile aliases)
+        hops = 0
+        while (root is not None and root.op in ("convert", "copy", "bitcast")
+               and root.operands and hops < 4):
+            nxt = called.by_name.get(root.operands[0])
+            if nxt is None:
+                break
+            root = nxt
+            hops += 1
+        dus_dests: set = set()
+        if root is not None and root.op in ("dynamic-update-slice", "scatter"):
+            upd = called.by_name.get(root.operands[1]) if len(root.operands) > 1 else None
+            b = 2.0 * (_bytes_of(upd.shape) if upd is not None else _bytes_of(root.shape))
+            # follow unary chains (convert/copy/bitcast) from the destination
+            # back to the aliased loop-carry parameter — on TPU the carry is
+            # updated in place, so only the window counts.
+            frontier = [root.operands[0]] if root.operands else []
+            while frontier:
+                nm = frontier.pop()
+                if nm in dus_dests:
+                    continue
+                dus_dests.add(nm)
+                src = called.by_name.get(nm)
+                if src is not None and src.op in ("convert", "copy", "bitcast",
+                                                  "broadcast", "negate"):
+                    frontier.extend(src.operands[:1])
+        else:
+            b = float(_bytes_of(ins.shape))
+        params = [i for i in called.instrs if i.op == "parameter"]
+        pidx = {}
+        for p in params:
+            mm = re.search(r"parameter\((\d+)\)", p.line)
+            if mm:
+                pidx[int(mm.group(1))] = p.name
+        for k, opn in enumerate(ins.operands):
+            src = comp.by_name.get(opn)
+            if src is None:
+                continue
+            full = _bytes_of(src.shape)
+            pname = pidx.get(k)
+            if pname is None:
+                b += full
+                continue
+            if pname in dus_dests:
+                continue  # in-place destination: write already counted
+            consumers = [i for i in called.instrs if pname in i.operands]
+            if consumers and all(
+                (c.op in ("dynamic-slice", "slice", "gather") and
+                 (not c.operands or c.operands[0] == pname)) or
+                (c.op in ("dynamic-update-slice", "scatter") and
+                 c.operands and c.operands[0] == pname)
+                for c in consumers
+            ):
+                b += sum(
+                    _bytes_of(c.shape) for c in consumers
+                    if c.op in ("dynamic-slice", "slice", "gather")
+                )
+            else:
+                b += full
+        return b
+
+    visit(entry, 1.0, False)
+    return cost

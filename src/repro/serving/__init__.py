@@ -1,0 +1,1 @@
+from repro.serving.server import BatchedServer, Request  # noqa: F401

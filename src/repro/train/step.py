@@ -1,0 +1,69 @@
+"""Training step: grad accumulation over microbatches + AdamW.
+
+``num_microbatches`` splits the global batch along dim 0 and scans, keeping
+live activation memory at 1/num_microbatches of the full batch — this is what
+lets 27B–76B configs fit the 16GB/chip budget in the dry-run. Gradients
+accumulate in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import adamw_update, cosine_lr
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    *,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    num_microbatches: int = 1,
+    remat: bool = True,
+    remat_group: int = 1,
+):
+    schedule = cosine_lr(lr, warmup, total_steps)
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True
+        )(params, mb, cfg, remat=remat, remat_group=remat_group)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch: Dict[str, jax.Array]):
+        """``batch`` leaves are (num_microbatches, B/num_microbatches, ...)
+        when num_microbatches > 1 — the data pipeline delivers them in that
+        layout so the per-microbatch batch dim stays sharded over the data
+        axes (an in-jit reshape of the sharded batch dim would force SPMD to
+        replicate)."""
+        if num_microbatches == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            n = num_microbatches
+            mbs = batch
+
+            def body(acc, mb):
+                g, metrics = grads_of(params, mb)
+                return jax.tree.map(jnp.add, acc, g), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, ms = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(jnp.mean, ms)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=schedule
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,126 @@
+"""Cold-inference engine end-to-end + component tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import ColdEngine
+from repro.core.registry import (
+    ConvDirect, ConvIm2col, ConvWinograd, LayerSpec, LinearDirect,
+    LinearPacked,
+)
+from repro.models.cnn import build_cnn
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    layers, x = build_cnn("mobilenet", image=24, width=0.35)
+    eng = ColdEngine(layers, tmp_path_factory.mktemp("store"))
+    stats = eng.decide(x, n_little=2)
+    return eng, x, stats
+
+
+def test_decide_produces_plan(engine):
+    eng, x, stats = engine
+    assert eng.plan is not None
+    assert stats["plan_generation_s"] > 0
+    assert stats["est_makespan_s"] > 0
+    # every layer got a choice
+    assert len(eng.plan.choices) == len(eng.layers)
+
+
+def test_cold_modes_agree(engine):
+    eng, x, _ = engine
+    r1 = eng.run_cold(x, mode="nnv12")
+    r2 = eng.run_cold(x, mode="sequential")
+    np.testing.assert_allclose(np.asarray(r1.output), np.asarray(r2.output),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_warm_faster_than_cold_sequential(engine):
+    eng, x, _ = engine
+    warm = eng.run_warm(x)
+    r2 = eng.run_cold(x, mode="sequential")
+    assert warm < r2.total_s
+
+
+def test_cache_storage_accounted(engine):
+    eng, x, stats = engine
+    cached = [c for c in eng.plan.choices if c.use_cache]
+    if cached:
+        assert stats["cache_bytes"] > 0
+    assert stats["model_bytes"] > 0
+
+
+def test_plan_roundtrip(engine):
+    from repro.core.scheduler import Plan
+
+    eng, _, _ = engine
+    d = eng.plan.to_dict()
+    p2 = Plan.from_dict(d)
+    assert p2.to_dict() == d
+
+
+def test_kernel_equivalence_conv():
+    rng = np.random.default_rng(0)
+    spec = LayerSpec("c", "conv2d",
+                     {"kernel": 3, "stride": 1, "padding": "SAME"},
+                     {"w": (12, 6, 3, 3), "b": (12,)})
+    raw = {"w": rng.standard_normal((12, 6, 3, 3)).astype(np.float32),
+           "b": rng.standard_normal(12).astype(np.float32)}
+    x = jnp.asarray(rng.standard_normal((2, 9, 9, 6)).astype(np.float32))
+    outs = []
+    for K in (ConvDirect(), ConvIm2col(), ConvWinograd()):
+        w = {k: jnp.asarray(v) for k, v in K.transform(raw, spec).items()}
+        outs.append(np.asarray(K.execute(w, x, spec)))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
+
+
+def test_kernel_equivalence_linear():
+    rng = np.random.default_rng(1)
+    spec = LayerSpec("l", "linear",
+                     {"in_features": 70, "out_features": 33},
+                     {"w": (70, 33)})
+    raw = {"w": rng.standard_normal((70, 33)).astype(np.float32)}
+    x = jnp.asarray(rng.standard_normal((4, 70)).astype(np.float32))
+    y0 = LinearDirect().execute(
+        {k: jnp.asarray(v) for k, v in raw.items()}, x, spec)
+    lp = LinearPacked()
+    y1 = lp.execute({k: jnp.asarray(v)
+                     for k, v in lp.transform(raw, spec).items()}, x, spec)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+
+
+def test_winograd_transform_size_tradeoff():
+    """Table 2's premise: winograd's transformed weights are larger than raw
+    (16/9 per filter) and its transform is the expensive stage."""
+    spec = LayerSpec("c", "conv2d",
+                     {"kernel": 3, "stride": 1, "padding": "SAME"},
+                     {"w": (32, 16, 3, 3)})
+    rng = np.random.default_rng(0)
+    raw = {"w": rng.standard_normal((32, 16, 3, 3)).astype(np.float32)}
+    wino = ConvWinograd().transform(raw, spec)
+    raw_b = sum(v.nbytes for v in raw.values())
+    wino_b = sum(v.nbytes for v in wino.values())
+    assert wino_b > raw_b * 1.5  # 16/9 ≈ 1.78x
+
+
+def test_continuous_session_switching(tmp_path):
+    from repro.core.switching import ContinuousSession
+
+    layers, x = build_cnn("squeezenet", image=24, width=0.35)
+    eng = ColdEngine(layers, tmp_path)
+    eng.decide(x, n_little=2)
+    sess = ContinuousSession(eng, n_little=2)
+    r1 = sess.cold_infer(x)
+    r2 = sess.warm_infer(x, wait=True)
+    np.testing.assert_allclose(np.asarray(r1.output), np.asarray(r2.output),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_io_interference_measured(engine):
+    """§3.2: the engine calibrates co-read interference; factor is >= 1 and
+    folded into the plan's little-core prep costs."""
+    eng, x, stats = engine
+    assert stats["io_interference"] >= 1.0
+    assert eng.io_interference == stats["io_interference"]

@@ -1,0 +1,79 @@
+"""Multi-device correctness of the shard_map flash-decoding path.
+
+Runs in a subprocess with 8 forced host devices (the main test process must
+keep 1 device), building a (data=2, model=4) mesh and checking that the
+sharded decode step matches the single-device reference bitwise-closely."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models import sharding as SH
+    from repro.models.runtime_flags import FLAGS
+
+    cfg = get_config("qwen3-32b").reduced(
+        num_layers=2, num_heads=4, num_kv_heads=2, d_model=256, head_dim=64,
+        vocab_size=512)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B, W = 4, 32
+    toks = jax.random.randint(key, (B, 5), 0, cfg.vocab_size)
+
+    # reference: single device, plain path
+    FLAGS["decode_flash"] = False
+    state = T.init_decode_state(cfg, B, W)
+    outs = []
+    st = state
+    for t in range(5):
+        lg, st = T.decode_step(params, st, {"tokens": toks[:, t:t+1]},
+                               jnp.int32(t), cfg)
+        outs.append(np.asarray(lg))
+    ref = np.stack(outs)
+
+    # sharded: mesh (data=2, model=4), flash decode ON
+    FLAGS["decode_flash"] = True
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    mshape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = SH.param_specs(jax.eval_shape(lambda: params), cfg, mshape)
+    sspecs = SH.decode_state_specs(jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, W)), cfg, mshape)
+    named = lambda s: SH.to_named(s, mesh)
+    with mesh:
+        params_s = jax.device_put(params, named(pspecs))
+        st = jax.device_put(T.init_decode_state(cfg, B, W), named(sspecs))
+        step = jax.jit(lambda p, s, b, pos: T.decode_step(p, s, b, pos, cfg),
+                       in_shardings=(named(pspecs), named(sspecs), None, None),
+                       donate_argnums=(1,))
+        outs2 = []
+        for t in range(5):
+            lg, st = step(params_s, st, {"tokens": toks[:, t:t+1]},
+                          jnp.int32(t))
+            outs2.append(np.asarray(lg))
+    got = np.stack(outs2)
+    err = float(np.abs(got - ref).max())
+    # verify the sharded path actually engaged (cache seq dim sharded)
+    seq_sharded = "model" in str(st["k"].sharding)
+    print("RESULT", json.dumps({"err": err, "seq_sharded": bool(seq_sharded)}))
+""")
+
+
+def test_flash_decode_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", "import json\n" + SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+    res = json.loads(line.split("RESULT ")[1])
+    assert res["err"] < 0.05, res

@@ -1,0 +1,55 @@
+"""int8-quantized KV cache: decode must track the full-precision forward
+within quantization tolerance, and the state must actually be int8."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.runtime_flags import FLAGS
+
+
+@pytest.fixture(autouse=True)
+def _restore_flags():
+    old = dict(FLAGS)
+    yield
+    FLAGS.clear()
+    FLAGS.update(old)
+
+
+def test_int8_cache_decode_close_to_forward():
+    cfg = get_config("qwen3-32b").reduced()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, _, _ = T.forward(params, {"tokens": toks}, cfg)
+    FLAGS["kv_cache_int8"] = True
+    state = T.init_decode_state(cfg, B, S)
+    assert state["k"].dtype == jnp.int8
+    assert state["k_scale"].shape == state["k"].shape[:-1]
+    dstep = jax.jit(lambda p, s, b, pos: T.decode_step(p, s, b, pos, cfg))
+    outs = []
+    for t in range(S):
+        lg, state = dstep(params, state, {"tokens": toks[:, t:t + 1]},
+                          jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert float(jnp.abs(dec - logits).max()) < 0.3   # int8 tolerance
+    # and distinctly tighter than garbage: correlation with reference
+    import numpy as np
+
+    a = np.asarray(dec, np.float32).ravel()
+    b = np.asarray(logits, np.float32).ravel()
+    corr = float(np.corrcoef(a, b)[0, 1])
+    assert corr > 0.999
+
+
+def test_quantize_roundtrip():
+    from repro.models.layers import _quantize_kv
+
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 64)) * 3.0
+    q, scale = _quantize_kv(k)
+    back = q.astype(jnp.float32) * scale[..., None]
+    rel = float(jnp.max(jnp.abs(back - k)) / jnp.max(jnp.abs(k)))
+    assert rel < 1.0 / 64  # <= half an int8 step of the absmax

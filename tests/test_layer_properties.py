@@ -1,0 +1,66 @@
+"""Hypothesis property tests on the layer library invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import _quantize_kv, rms_norm, rope
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.sampled_from([32, 64]))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(seed, B, D):
+    """Rotary embedding is a rotation: per-head L2 norm is invariant."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, 6, 2, D)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, 10_000, size=(B, 6)).astype(np.int32))
+    y = rope(x, pos, 10_000.0)
+    n1 = jnp.linalg.norm(x, axis=-1)
+    n2 = jnp.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_rope_relative_position_property(seed):
+    """<rope(q,p), rope(k,p)> depends only on the position difference."""
+    rng = np.random.default_rng(seed)
+    D = 64
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, D)).astype(np.float32))
+
+    def score(pq, pk):
+        qr = rope(q, jnp.full((1, 1), pq, jnp.int32), 10_000.0)
+        kr = rope(k, jnp.full((1, 1), pk, jnp.int32), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    d = int(rng.integers(0, 50))
+    off = int(rng.integers(0, 1000))
+    assert abs(score(7 + d, 7) - score(off + d, off)) < 1e-2
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_rms_norm_scale_invariance(seed, alpha):
+    """rms_norm(alpha * x) == rms_norm(x)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)).astype(np.float32)) + 0.1
+    g = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+    y1 = rms_norm(x, g)
+    y2 = rms_norm(x * alpha, g)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 50.0))
+@settings(max_examples=25, deadline=None)
+def test_int8_quantization_error_bound(seed, scale):
+    """Absolute dequantization error <= absmax/127 per (entry, head)."""
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((2, 1, 3, 32)).astype(np.float32)) * scale
+    q, s = _quantize_kv(k)
+    back = q.astype(jnp.float32) * s[..., None]
+    amax = np.abs(np.asarray(k)).max(axis=-1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(k))
+    assert (err <= amax / 127.0 * 0.51 + 1e-6).all()

@@ -1,0 +1,117 @@
+"""Scheduler correctness + properties.
+
+- Algorithm 1 vs exhaustive optimum on tiny graphs (near-optimality claim);
+- hypothesis property tests on the simulator invariants: dependency order,
+  makespan bounds (>= critical path, <= sequential), work-stealing never
+  hurts the makespan in the simulator.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (
+    Choice, LayerCandidates, brute_force_optimal, inner_schedule,
+    pareto_filter, schedule, schedule_annealed, simulate,
+)
+
+
+def _mk_cands(prep_exec):
+    """prep_exec: list per layer of [(prep_little, prep_big, exec)]."""
+    out = []
+    for li, opts in enumerate(prep_exec):
+        out.append(LayerCandidates(
+            layer=f"l{li}",
+            options=[(Choice(f"k{i}", False), pl, pb, ex)
+                     for i, (pl, pb, ex) in enumerate(opts)],
+        ))
+    return out
+
+
+def test_pareto_filter_drops_dominated():
+    c = [(Choice("a", False), 1.0, 1.0), (Choice("b", False), 2.0, 2.0),
+         (Choice("c", False), 0.5, 3.0)]
+    kept = pareto_filter(c)
+    names = {x[0].kernel for x in kept}
+    assert names == {"a", "c"}
+
+
+def test_algorithm1_near_optimal_small():
+    """Winograd-vs-sgemm style trade-offs on 5 layers: Algorithm 1 within
+    15% of the brute-force optimum."""
+    import random
+
+    rng = random.Random(0)
+    for trial in range(10):
+        cands = _mk_cands([
+            [(rng.uniform(1, 5), rng.uniform(0.5, 2), rng.uniform(0.2, 2)),
+             (rng.uniform(0.2, 1), rng.uniform(0.1, 0.5), rng.uniform(1, 4))]
+            for _ in range(5)
+        ])
+        heur = schedule(cands, M_l=2)
+        opt = brute_force_optimal(cands, M_l=2)
+        assert heur.est_makespan <= opt.est_makespan * 1.15 + 1e-9, \
+            (trial, heur.est_makespan, opt.est_makespan)
+
+
+def test_schedule_beats_sequential():
+    cands = _mk_cands([[(1.0, 0.5, 0.5)] for _ in range(8)])
+    plan = schedule(cands, M_l=3)
+    sequential = sum(0.5 + 0.5 for _ in range(8))  # big-core prep + exec
+    assert plan.est_makespan <= sequential + 1e-9
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0.01, 5), st.floats(0.01, 5), st.floats(0.01, 5)),
+        min_size=1, max_size=12),
+    st.integers(1, 4),
+)
+@settings(max_examples=60, deadline=None)
+def test_simulator_invariants(layers, M_l):
+    pl = [a for a, b, e in layers]
+    pb = [b for a, b, e in layers]
+    ex = [e for a, b, e in layers]
+    big_prep, qs, mk = inner_schedule(pl, pb, ex, M_l)
+    N = len(layers)
+    # every layer prepped exactly once
+    allp = sorted(big_prep + [i for q in qs for i in q])
+    assert allp == list(range(N))
+    # makespan >= exec critical path; <= fully sequential on big
+    assert mk >= sum(ex) - 1e-9
+    assert mk <= sum(pb) + sum(ex) + sum(pl) + 1e-6
+    # work stealing never slows the simulated makespan
+    mk_ws, _ = simulate(pl, pb, ex, big_prep, qs, work_stealing=True)
+    assert mk_ws <= mk * 1.5 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_annealing_not_better_than_bruteforce(seed):
+    import random
+
+    rng = random.Random(seed)
+    cands = _mk_cands([
+        [(rng.uniform(0.1, 3), rng.uniform(0.1, 2), rng.uniform(0.1, 3))
+         for _ in range(2)]
+        for _ in range(4)
+    ])
+    opt = brute_force_optimal(cands, M_l=2)
+    ann = schedule_annealed(cands, M_l=2, iters=300, seed=seed)
+    assert ann.est_makespan >= opt.est_makespan - 1e-9
+
+
+def test_workload_stealing_recovers_busy_core():
+    """Fig. 11 semantics: with a loaded little core, stealing must beat
+    sticking to the static plan."""
+    pl = [1.0] * 8
+    pb = [0.5] * 8
+    ex = [0.1] * 8
+    big_prep, qs, _ = inner_schedule(pl, pb, ex, M_l=2)
+    load = {0: 4.0}  # little core 0 is 4x slower (50% bg load on 2 HT...)
+    mk_static, _ = simulate(pl, pb, ex, big_prep, qs, core_load=load,
+                            work_stealing=False)
+    mk_steal, _ = simulate(pl, pb, ex, big_prep, qs, core_load=load,
+                           work_stealing=True)
+    assert mk_steal <= mk_static + 1e-9
