@@ -31,6 +31,7 @@ def run(print_csv=True, model="resnet18"):
                 for cache in ((False, True) if l.spec.weight_shapes else (False,)):
                     pl = (p.read_cached_s * rd_f if cache
                           else p.read_raw_s * rd_f + p.transform_s * tr_f)
+                    pl += p.stage_s  # device staging: DMA-bound, factor ~1
                     opts.append((Choice(p.kernel, cache), pl,
                                  p.prep_s(cache), p.exec_s))
             cands.append(LayerCandidates(l.spec.name, opts))

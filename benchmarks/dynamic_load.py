@@ -21,11 +21,12 @@ def run(print_csv=True, model="resnet18"):
     pl, pb, ex = [], [], []
     for n, c in zip(names, eng.plan.choices):
         p = prof(n, c.kernel)
+        stage = p.stage_s * cm.little_stage
         if c.use_cache:
-            pl.append(p.read_cached_s * cm.little_read)
+            pl.append(p.read_cached_s * cm.little_read + stage)
         else:
             pl.append(p.read_raw_s * cm.little_read
-                      + p.transform_s * cm.little_transform)
+                      + p.transform_s * cm.little_transform + stage)
         pb.append(p.prep_s(c.use_cache))
         ex.append(p.exec_s)
 

@@ -1,0 +1,151 @@
+"""Cold weight-read formats: per-tensor .npy vs packed bundle vs mmap bundle.
+
+Measures the per-layer 'weights reading' op the scheduler pipelines, across
+the three on-disk layouts the ``LayerStore`` supports:
+
+  npy          legacy: one file per tensor, N opens + N full copies
+  bundle       packed single-blob layer file, ONE open + one sequential read
+  bundle_mmap  same file, zero-copy ``np.memmap`` views — the read op is
+               metadata-only; payload pages fault in later, inside
+               transform/stage, off the critical exec chain
+
+``bundle_mmap_touch`` additionally faults every payload byte in, so the
+mmap row can't hide I/O that merely moved downstream — it bounds the
+total cost, while ``bundle_mmap`` is what the pipelined runtime's read op
+actually pays.
+
+Workloads: cnn_zoo models (2 tensors/layer — worst case for bundling) and
+an LLM decoder graph (10+ tensors per tblock — where N-opens hurt most).
+
+Run: PYTHONPATH=src python benchmarks/io_formats.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.checkpoint import LayerStore
+from repro.core.oscache import CAN_DROP, drop_page_cache
+
+try:
+    from benchmarks.common import csv_line
+except ModuleNotFoundError:  # invoked as `python benchmarks/io_formats.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import csv_line
+
+
+def _cnn_weights(model: str, image: int, width: float) -> Dict[str, dict]:
+    from repro.models.cnn import build_cnn
+
+    layers, _ = build_cnn(model, image=image, width=width)
+    return {l.spec.name: l.weights for l in layers if l.weights}
+
+
+def _llm_weights(num_layers: int, d_model: int) -> Dict[str, dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.llm_graph import build_llm_graph
+    from repro.models import transformer as T
+
+    cfg = get_config("smollm-360m").reduced(
+        num_layers=num_layers, d_model=d_model, d_ff=d_model * 3,
+        num_heads=8, num_kv_heads=4, head_dim=d_model // 8,
+        vocab_size=2048)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    graph, _ = build_llm_graph(cfg, params)
+    return {l.spec.name: l.weights for l in graph if l.weights}
+
+
+def _sweep(read_fn, names: List[str], repeats: int) -> float:
+    """Best-of-N full-model sweep: seconds to read every layer once,
+    page cache dropped first when the host allows (paper methodology)."""
+    best = float("inf")
+    for _ in range(repeats):
+        if CAN_DROP:
+            drop_page_cache()
+        t0 = time.perf_counter()
+        for n in names:
+            read_fn(n)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _touch(w: Dict[str, np.ndarray]) -> int:
+    total = 0
+    for v in w.values():
+        total += int(v.view(np.uint8).reshape(-1)[:: 4096].sum())
+    return total
+
+
+def bench_model(name: str, weights: Dict[str, dict], repeats: int = 3,
+                print_csv: bool = True) -> Dict[str, float]:
+    names = list(weights)
+    with tempfile.TemporaryDirectory(prefix=f"iofmt_{name}_") as td:
+        s_npy = LayerStore(Path(td) / "npy", fmt="npy")
+        s_bun = LayerStore(Path(td) / "bundle", fmt="bundle")
+        for ln, w in weights.items():
+            s_npy.write_raw(ln, w)
+            s_bun.write_raw(ln, w)
+
+        t_npy = _sweep(lambda n: s_npy.read_raw(n), names, repeats)
+        t_bun = _sweep(lambda n: s_bun.read_raw(n, mmap=False), names, repeats)
+        t_map = _sweep(lambda n: s_bun.read_raw(n, mmap=True), names, repeats)
+        t_map_touch = _sweep(
+            lambda n: _touch(s_bun.read_raw(n, mmap=True)), names, repeats)
+
+    per_layer = 1.0 / max(len(names), 1)
+    res = {
+        "npy_s": t_npy, "bundle_s": t_bun, "bundle_mmap_s": t_map,
+        "bundle_mmap_touch_s": t_map_touch,
+        "speedup_bundle": t_npy / max(t_bun, 1e-9),
+        "speedup_mmap": t_npy / max(t_map, 1e-9),
+        "speedup_mmap_touch": t_npy / max(t_map_touch, 1e-9),
+    }
+    if print_csv:
+        print(csv_line(f"io_formats/{name}/npy", t_npy * per_layer,
+                       f"layers={len(names)}"))
+        print(csv_line(f"io_formats/{name}/bundle", t_bun * per_layer,
+                       f"speedup={res['speedup_bundle']:.2f}x"))
+        print(csv_line(f"io_formats/{name}/bundle_mmap", t_map * per_layer,
+                       f"speedup={res['speedup_mmap']:.2f}x"))
+        print(csv_line(f"io_formats/{name}/bundle_mmap_touch",
+                       t_map_touch * per_layer,
+                       f"speedup={res['speedup_mmap_touch']:.2f}x"))
+    return res
+
+
+def run(print_csv: bool = True, smoke: bool = False) -> Dict[str, Dict[str, float]]:
+    if smoke:
+        cases: List[Tuple[str, Dict[str, dict]]] = [
+            ("mobilenet", _cnn_weights("mobilenet", image=24, width=0.5)),
+            ("llm_tiny", _llm_weights(num_layers=3, d_model=256)),
+        ]
+        repeats = 3
+    else:
+        cases = [
+            ("mobilenet", _cnn_weights("mobilenet", image=40, width=1.0)),
+            ("resnet18", _cnn_weights("resnet18", image=40, width=1.0)),
+            ("squeezenet", _cnn_weights("squeezenet", image=40, width=1.0)),
+            ("llm_smollm", _llm_weights(num_layers=8, d_model=512)),
+        ]
+        repeats = 3
+    out = {}
+    for name, weights in cases:
+        out[name] = bench_model(name, weights, repeats=repeats,
+                                print_csv=print_csv)
+    if print_csv and not CAN_DROP:
+        print("# warning: cannot drop page cache — warm-cache numbers",
+              file=sys.stderr)
+    return out
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    run(print_csv=True, smoke=smoke)

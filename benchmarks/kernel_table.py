@@ -1,5 +1,6 @@
-"""Table 2 analogue: per-kernel read-raw / transform / read-cache / execute
-times for one conv operator (k=3, s=1, C=64 -> O=192, like the paper's)."""
+"""Table 2 analogue: per-kernel read-raw / transform / read-cache / stage /
+execute times for one conv operator (k=3, s=1, C=64 -> O=192, like the
+paper's); stage = host->device transfer of the transformed weights."""
 from __future__ import annotations
 
 import tempfile
@@ -37,6 +38,7 @@ def run(print_csv=True, cin=64, cout=192, hw=32):
                 print(csv_line(f"kernel_table/{kern.name}/read_raw", p.read_raw_s))
                 print(csv_line(f"kernel_table/{kern.name}/transform", p.transform_s))
                 print(csv_line(f"kernel_table/{kern.name}/read_cache", p.read_cached_s))
+                print(csv_line(f"kernel_table/{kern.name}/stage", p.stage_s))
                 print(csv_line(
                     f"kernel_table/{kern.name}/execute", p.exec_s,
                     f"cached_bytes={p.transformed_bytes};raw_bytes={p.raw_bytes}"))

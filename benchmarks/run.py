@@ -11,6 +11,8 @@
 #   shader_cache      -> §3.4 (XLA executable cache = shader cache)
 #   core_sensitivity  -> beyond-paper: scheduler vs big/little asymmetry
 #   roofline_report   -> EXPERIMENTS.md §Roofline (from the dry-run JSON)
+#   io_formats        -> beyond-paper: per-tensor npy vs packed bundle vs
+#                        zero-copy mmap bundle cold-read comparison
 import sys
 import time
 
@@ -18,11 +20,12 @@ import time
 def main() -> None:
     from benchmarks import (
         ablation, cold_vs_warm, continuous, core_sensitivity, dynamic_load,
-        e2e_speedup, kernel_table, plan_generation, roofline_report,
-        scheduler_quality, shader_cache,
+        e2e_speedup, io_formats, kernel_table, plan_generation,
+        roofline_report, scheduler_quality, shader_cache,
     )
 
     benches = [
+        ("io_formats", io_formats.run),
         ("kernel_table", kernel_table.run),
         ("cold_vs_warm", cold_vs_warm.run),
         ("e2e_speedup", e2e_speedup.run),

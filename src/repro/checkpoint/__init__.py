@@ -1,1 +1,4 @@
 from repro.checkpoint.io import LayerStore, save_pytree, load_pytree  # noqa: F401
+from repro.checkpoint.bundle import (  # noqa: F401
+    bundle_nbytes, read_bundle, read_header, write_bundle,
+)

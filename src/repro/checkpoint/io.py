@@ -2,11 +2,18 @@
 
 Two facilities:
 
-  * ``LayerStore`` — per-layer weight files on disk, the cold-inference
+  * ``LayerStore`` — per-layer weight storage on disk, the cold-inference
     engine's substrate. Raw weights live under ``raw/``; post-transformed
-    weights (the paper's §3.1.2 cache) under ``cache/<kernel>/``. Reads are
-    real ``np.load`` disk I/O — these are the 'weights reading' operations
-    the scheduler pipelines.
+    weights (the paper's §3.1.2 cache) under ``cache/<kernel>/``.
+
+    The default format is the packed single-file *bundle*
+    (``checkpoint/bundle.py``): all tensors of a layer in one file with
+    64-byte-aligned segments, read back as ONE open + one ``np.memmap``
+    (zero-copy, read-only views) instead of N opens + N full copies —
+    MNN-style pre-arranged layouts for sequential, cheap cold reads.
+    ``fmt="npy"`` keeps the legacy per-tensor ``.npy`` layout (one file
+    per tensor, bf16 stored as uint16 views) for format benchmarks and
+    the bundle-vs-legacy equivalence tests.
 
   * pytree checkpointing (``save_pytree``/``load_pytree``) for the training
     loop — flat .npy files keyed by the pytree path.
@@ -20,11 +27,16 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.checkpoint.bundle import read_bundle, write_bundle
+
 
 def _safe(name: str) -> str:
     return name.replace("/", "_")
 
 
+# ---------------------------------------------------------------------------
+# legacy per-tensor .npy layout (fmt="npy")
+# ---------------------------------------------------------------------------
 def _save_arr(path_base: Path, v: np.ndarray):
     """np.save with bf16 support (stored as uint16 + .bf16.npy suffix —
     numpy cannot round-trip ml_dtypes through .npy)."""
@@ -52,51 +64,84 @@ def _load_dir(d: Path) -> Dict[str, np.ndarray]:
 
 
 class LayerStore:
-    def __init__(self, root: Path):
+    """Per-layer weight store. ``fmt="bundle"`` (default) packs each layer
+    into one aligned blob; reads default to zero-copy mmap views
+    (``mmap=False`` forces one materializing sequential read)."""
+
+    def __init__(self, root: Path, *, fmt: str = "bundle", mmap: bool = True):
+        assert fmt in ("bundle", "npy"), fmt
         self.root = Path(root)
+        self.fmt = fmt
+        self.mmap = mmap
         (self.root / "raw").mkdir(parents=True, exist_ok=True)
         (self.root / "cache").mkdir(parents=True, exist_ok=True)
 
+    # -- layout -------------------------------------------------------------
+    def _raw_path(self, layer: str) -> Path:
+        base = self.root / "raw" / _safe(layer)
+        # NOT with_suffix: dotted layer names ("block.0") must not collide
+        return base.parent / (base.name + ".bundle") if self.fmt == "bundle" else base
+
+    def _cache_path(self, layer: str, kernel: str) -> Path:
+        base = self.root / "cache" / kernel / _safe(layer)
+        return base.parent / (base.name + ".bundle") if self.fmt == "bundle" else base
+
+    def _write(self, path: Path, weights: Dict[str, np.ndarray]):
+        if self.fmt == "bundle":
+            path.parent.mkdir(parents=True, exist_ok=True)
+            write_bundle(path, weights)
+        else:
+            path.mkdir(parents=True, exist_ok=True)
+            for k, v in weights.items():
+                _save_arr(path / k, v)
+
+    def _read(self, path: Path, mmap: Optional[bool]) -> Dict[str, np.ndarray]:
+        if not path.exists():
+            return {}  # weightless (stateless) layers have no file on disk
+        if self.fmt == "bundle":
+            use = self.mmap if mmap is None else mmap
+            return read_bundle(path, mmap=use)
+        return _load_dir(path)
+
     # -- raw weights --------------------------------------------------------
     def write_raw(self, layer: str, weights: Dict[str, np.ndarray]):
-        d = self.root / "raw" / _safe(layer)
-        d.mkdir(parents=True, exist_ok=True)
-        for k, v in weights.items():
-            _save_arr(d / k, v)
+        self._write(self._raw_path(layer), weights)
 
-    def read_raw(self, layer: str) -> Dict[str, np.ndarray]:
-        return _load_dir(self.root / "raw" / _safe(layer))
+    def read_raw(self, layer: str, *, mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
+        return self._read(self._raw_path(layer), mmap)
 
     def raw_bytes(self, layer: str) -> int:
-        d = self.root / "raw" / _safe(layer)
-        return sum(p.stat().st_size for p in d.glob("*.npy"))
+        p = self._raw_path(layer)
+        if self.fmt == "bundle":
+            return p.stat().st_size if p.exists() else 0
+        return sum(q.stat().st_size for q in p.glob("*.npy"))
 
     # -- post-transformed cache (§3.1.2) ------------------------------------
-    def _cache_dir(self, layer: str, kernel: str) -> Path:
-        return self.root / "cache" / kernel / _safe(layer)
-
     def write_cached(self, layer: str, kernel: str, weights: Dict[str, np.ndarray]):
-        d = self._cache_dir(layer, kernel)
-        d.mkdir(parents=True, exist_ok=True)
-        for k, v in weights.items():
-            _save_arr(d / k, v)
+        self._write(self._cache_path(layer, kernel), weights)
 
-    def read_cached(self, layer: str, kernel: str) -> Dict[str, np.ndarray]:
-        return _load_dir(self._cache_dir(layer, kernel))
+    def read_cached(self, layer: str, kernel: str, *,
+                    mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
+        return self._read(self._cache_path(layer, kernel), mmap)
 
     def has_cached(self, layer: str, kernel: str) -> bool:
-        return self._cache_dir(layer, kernel).exists()
+        return self._cache_path(layer, kernel).exists()
 
     def drop_cached(self, layer: str, kernel: str):
-        d = self._cache_dir(layer, kernel)
-        if d.exists():
-            shutil.rmtree(d)
+        p = self._cache_path(layer, kernel)
+        if p.is_dir():
+            shutil.rmtree(p)
+        elif p.exists():
+            p.unlink()
 
+    # -- storage accounting (real on-disk footprint) ------------------------
     def cache_bytes(self) -> int:
-        return sum(p.stat().st_size for p in (self.root / "cache").rglob("*.npy"))
+        return sum(p.stat().st_size
+                   for p in (self.root / "cache").rglob("*") if p.is_file())
 
     def model_bytes(self) -> int:
-        return sum(p.stat().st_size for p in (self.root / "raw").rglob("*.npy"))
+        return sum(p.stat().st_size
+                   for p in (self.root / "raw").rglob("*") if p.is_file())
 
 
 # ---------------------------------------------------------------------------

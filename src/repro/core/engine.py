@@ -35,6 +35,7 @@ from repro.core.registry import (
 from repro.core.scheduler import (
     Choice, LayerCandidates, Plan, pareto_filter, schedule,
 )
+from repro.core.staging import stage_weights
 
 
 @dataclass
@@ -124,15 +125,20 @@ class ColdEngine:
                 p = prof.profile(l.spec, kern, xin)
                 plist.append(p)
                 for use_cache in ((False, True) if l.spec.weight_shapes else (False,)):
+                    # big-core prep = read(+transform)+stage; reads are
+                    # metadata-cheap with mmap bundles, staging carries the
+                    # actual byte movement — the split the scheduler needs
                     prep_big = p.prep_s(use_cache)
                     # little-core factors per op kind (Fig. 6 affinity),
                     # reads scaled by the measured co-read interference
                     rd = cm.little_read * self.io_interference
+                    stage = p.stage_s * cm.little_stage
                     if use_cache:
-                        prep_little = p.read_cached_s * rd
+                        prep_little = p.read_cached_s * rd + stage
                     else:
                         prep_little = (p.read_raw_s * rd
-                                       + p.transform_s * cm.little_transform)
+                                       + p.transform_s * cm.little_transform
+                                       + stage)
                     options.append(
                         (Choice(kern.name, use_cache), prep_little, prep_big,
                          p.exec_s))
@@ -156,12 +162,24 @@ class ColdEngine:
                 self.store.write_cached(l.spec.name, kern.name,
                                         kern.transform(raw, l.spec))
         gen_s = time.perf_counter() - t0
+        # read-vs-stage split of the chosen plan's big-core prep costs
+        split = {"read_s": 0.0, "transform_s": 0.0, "stage_s": 0.0}
+        for l, c in zip(self.layers, self.plan.choices):
+            p = next(pp for pp in self.profiles[l.spec.name]
+                     if pp.kernel == c.kernel)
+            if c.use_cache:
+                split["read_s"] += p.read_cached_s
+            else:
+                split["read_s"] += p.read_raw_s
+                split["transform_s"] += p.transform_s
+            split["stage_s"] += p.stage_s
         stats = {
             "plan_generation_s": gen_s,
             "est_makespan_s": self.plan.est_makespan,
             "io_interference": self.io_interference,
             "cache_bytes": self.store.cache_bytes(),
             "model_bytes": self.store.model_bytes(),
+            "prep_split": split,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
                         for l, c in zip(self.layers, self.plan.choices)},
         }
@@ -207,9 +225,28 @@ class ColdEngine:
         use_cache = {l.spec.name: c.use_cache
                      for l, c in zip(self.layers, plan.choices)}
         jitted = self._jitted_map(plan.choices, self._input_example)
+        # profiled per-layer LITTLE-core prep costs (same factors the
+        # simulator uses) let the runtime's work stealer pick the donor by
+        # remaining prep time, matching the plan's makespan model
+        cm = self.core_model
+        interference = getattr(self, "io_interference", 1.0)
+        prep_costs = {}
+        for l, c in zip(self.layers, plan.choices):
+            p = next((pp for pp in self.profiles.get(l.spec.name, [])
+                      if pp.kernel == c.kernel), None)
+            if p is not None:
+                rd = cm.little_read * interference
+                stage = p.stage_s * cm.little_stage
+                if c.use_cache:
+                    prep_costs[l.spec.name] = p.read_cached_s * rd + stage
+                else:
+                    prep_costs[l.spec.name] = (
+                        p.read_raw_s * rd
+                        + p.transform_s * cm.little_transform + stage)
         return PipelineRuntime(
             self.specs, kernels, use_cache, self.store, jitted,
             n_little=n_little, work_stealing=work_stealing,
+            prep_costs=prep_costs or None,
         )
 
     def run_cold(self, x, *, n_little: int = 3, mode: str = "nnv12") -> RunResult:
@@ -238,7 +275,9 @@ class ColdEngine:
             kern = self._kernel_by_name(l.spec, ch.kernel)
             raw = self.store.read_raw(l.spec.name) if l.spec.weight_shapes else {}
             w = kern.transform(raw, l.spec) if l.spec.weight_shapes else {}
-            weights[l.spec.name] = {k: jnp.asarray(v) for k, v in w.items()}
+            # stage_weights, not jnp.asarray: identity transforms hand back
+            # mmap views whose aliasing would leave disk I/O in execute
+            weights[l.spec.name] = stage_weights(w)
         best = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()

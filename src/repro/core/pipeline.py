@@ -2,15 +2,24 @@
 
 Executes a scheduling Plan with real threads and real work:
   * one worker thread per (simulated) little core, each draining its queue of
-    preparation ops (disk read + weights transform — numpy releases the GIL
-    for the heavy parts);
+    preparation ops (disk read + weights transform + device staging — numpy
+    and the device transfer release the GIL for the heavy parts);
   * the caller's thread plays the big-core cluster: it runs any big-core
     preps first, then the execution chain e_1..e_N, blocking on each layer's
     prep-completion event;
-  * work stealing: an idle worker steals the head of the longest remaining
-    queue (§3.3 'dealing with hardware dynamics').
+  * work stealing: an idle worker steals from the *tail* of the queue with
+    the most remaining preparation time (§3.3 'dealing with hardware
+    dynamics') — the same rule the scheduler's simulator models.
 
-Every op's (start, end) is recorded for the benchmark breakdowns.
+Preparation now ends with an explicit *stage* op (``jax.device_put``): the
+weights arrive on device as part of prep, off the critical exec chain, so
+execute ops run with device-resident weights and contain no host→device
+conversion. With ``stage_in_prep=False`` staging is deferred to the big
+cores, where ``prefetch=True`` overlaps layer i+1's device transfer with
+layer i's execution.
+
+Every op's (start, end) is recorded for the benchmark breakdowns; trace
+kinds are ``read`` / ``transform`` / ``stage`` / ``execute``.
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.registry import Kernel, LayerSpec
 from repro.core.scheduler import Plan
+from repro.core.staging import stage_weights
 
 
 @dataclass
@@ -59,6 +69,9 @@ class PipelineRuntime:
         jitted: Dict[str, Callable],      # layer name -> jitted exec fn
         n_little: int,
         work_stealing: bool = True,
+        stage_in_prep: bool = True,
+        prefetch: bool = True,
+        prep_costs: Optional[Dict[str, float]] = None,
     ):
         self.specs = {s.name: s for s in specs}
         self.order = [s.name for s in specs]
@@ -68,15 +81,27 @@ class PipelineRuntime:
         self.jitted = jitted
         self.n_little = n_little
         self.work_stealing = work_stealing
+        self.stage_in_prep = stage_in_prep
+        self.prefetch = prefetch
+        # per-layer prep-cost estimates drive donor selection when stealing;
+        # weight bytes are the fallback proxy when no profile is plumbed in
+        self.prep_costs = prep_costs or {
+            s.name: float(s.weight_bytes) for s in specs}
 
-    # -- one preparation op (read [+ transform]) ----------------------------
+    # -- device staging (the new prep tail) ---------------------------------
+    _device_put = staticmethod(stage_weights)
+
+    # -- one preparation op (read [+ transform] + stage) --------------------
     def _prepare(self, layer: str, weights_out: Dict[str, Any],
-                 traces: List[OpTrace], core: str, t0: float, lock):
+                 traces: List[OpTrace], core: str, t0: float, lock,
+                 staged: Optional[Dict[str, threading.Event]] = None):
         spec = self.specs[layer]
         kern = self.kernels[layer]
         if not spec.weight_shapes:
             with lock:
                 weights_out[layer] = {}
+            if staged is not None:
+                staged[layer].set()
             return
         if self.use_cache.get(layer, False):
             ts = time.perf_counter()
@@ -91,8 +116,17 @@ class PipelineRuntime:
             te = time.perf_counter()
             traces.append(OpTrace(layer, "read", core, ts - t0, tm - t0))
             traces.append(OpTrace(layer, "transform", core, tm - t0, te - t0))
-        with lock:
-            weights_out[layer] = w
+        if self.stage_in_prep and staged is not None:
+            ts = time.perf_counter()
+            w = self._device_put(w)
+            traces.append(OpTrace(layer, "stage", core, ts - t0,
+                                  time.perf_counter() - t0))
+            with lock:
+                weights_out[layer] = w
+            staged[layer].set()
+        else:
+            with lock:
+                weights_out[layer] = w
 
     def run(self, x, plan: Plan) -> RunResult:
         t0 = time.perf_counter()
@@ -100,15 +134,37 @@ class PipelineRuntime:
         traces: List[OpTrace] = []
         lock = threading.Lock()
         done_events = {name: threading.Event() for name in self.order}
+        staged = {name: threading.Event() for name in self.order}
+        stage_started: Dict[str, bool] = {}
 
         queues = [[self.order[i] for i in q] for q in plan.little_queues]
         qlock = threading.Lock()
 
+        def stage(name: str, core: str):
+            """Stage one prepped layer onto the device (idempotent)."""
+            with lock:
+                if stage_started.get(name):
+                    return
+                stage_started[name] = True
+                w = weights[name]
+            ts = time.perf_counter()
+            wd = self._device_put(w)
+            te = time.perf_counter()
+            with lock:
+                weights[name] = wd
+            traces.append(OpTrace(name, "stage", core, ts - t0, te - t0))
+            staged[name].set()
+
         def steal() -> Optional[str]:
+            # §3.3: steal the TAIL (the layer the exec chain needs last) of
+            # the donor queue with the most remaining prep time — mirrors
+            # scheduler.simulate's work-stealing rule.
             with qlock:
-                donor = max(queues, key=lambda q: len(q), default=None)
+                donor = max(
+                    queues, default=None,
+                    key=lambda q: sum(self.prep_costs.get(n, 0.0) for n in q))
                 if donor:
-                    return donor.pop(0) if donor else None
+                    return donor.pop()
             return None
 
         def worker(j: int):
@@ -120,7 +176,7 @@ class PipelineRuntime:
                     layer = steal()
                 if layer is None:
                     return
-                self._prepare(layer, weights, traces, core, t0, lock)
+                self._prepare(layer, weights, traces, core, t0, lock, staged)
                 done_events[layer].set()
 
         threads = [threading.Thread(target=worker, args=(j,), daemon=True)
@@ -131,17 +187,25 @@ class PipelineRuntime:
         # big cores: preps first, then the execution chain
         for i in plan.big_prep:
             layer = self.order[i]
-            self._prepare(layer, weights, traces, "big", t0, lock)
+            self._prepare(layer, weights, traces, "big", t0, lock, staged)
             done_events[layer].set()
 
         y = x
-        for name in self.order:
+        for i, name in enumerate(self.order):
             done_events[name].wait()
+            if not staged[name].is_set():
+                stage(name, "big")      # deferred staging (stage_in_prep=False)
+            if self.prefetch and i + 1 < len(self.order):
+                nxt = self.order[i + 1]
+                if done_events[nxt].is_set() and not staged[nxt].is_set():
+                    # overlap layer i+1's device transfer with e_i
+                    threading.Thread(target=stage, args=(nxt, "stager"),
+                                     daemon=True).start()
+            staged[name].wait()
             with lock:
                 w = weights[name]
-            wj = {k: jnp.asarray(v) for k, v in w.items()}
             ts = time.perf_counter()
-            y = self.jitted[name](wj, y)
+            y = self.jitted[name](w, y)
             jax.block_until_ready(y)
             te = time.perf_counter()
             traces.append(OpTrace(name, "execute", "big", ts - t0, te - t0))
@@ -166,11 +230,14 @@ class PipelineRuntime:
             ts = time.perf_counter()
             weights[name] = kernels[name].transform(weights[name], self.specs[name])
             traces.append(OpTrace(name, "transform", "big", ts - t0, time.perf_counter() - t0))
-        y = x
-        for name in self.order:           # execute all
-            wj = {k: jnp.asarray(v) for k, v in weights[name].items()}
+        for name in self.order:           # stage all (host -> device)
             ts = time.perf_counter()
-            y = self.jitted[name](wj, y)
+            weights[name] = self._device_put(weights[name])
+            traces.append(OpTrace(name, "stage", "big", ts - t0, time.perf_counter() - t0))
+        y = x
+        for name in self.order:           # execute all (device-resident weights)
+            ts = time.perf_counter()
+            y = self.jitted[name](weights[name], y)
             jax.block_until_ready(y)
             traces.append(OpTrace(name, "execute", "big", ts - t0, time.perf_counter() - t0))
         return RunResult(output=y, total_s=time.perf_counter() - t0, traces=traces)

@@ -25,6 +25,7 @@ import numpy as np
 class OpKind(enum.Enum):
     READ = "read"
     TRANSFORM = "transform"
+    STAGE = "stage"      # host -> device weight transfer (device_put)
     EXECUTE = "execute"
     COMPILE = "compile"  # GPU-analogue stage: jit/"shader" compilation
 
@@ -139,8 +140,7 @@ class LinearLowPrecision(Kernel):
     op_type = "linear"
 
     def transform(self, raw, spec):
-        out = {"w": raw["w"].astype(np.dtype(jnp.bfloat16).newbyteorder("=")) if False
-               else np.asarray(jnp.asarray(raw["w"], jnp.bfloat16))}
+        out = {"w": np.asarray(jnp.asarray(raw["w"], jnp.bfloat16))}
         if "b" in raw:
             out["b"] = raw["b"]
         return out
@@ -194,17 +194,10 @@ class ConvIm2col(Kernel):
 
     def execute(self, w, x, spec):
         k, s, p = _conv_dims(spec)
-        N, H, W_, C = x.shape
-        if p == "SAME":
-            pad = ((k - 1) // 2, k // 2)
-        else:
-            pad = (0, 0)
-        xp = jnp.pad(x, ((0, 0), pad, pad, (0, 0)))
-        Ho = (xp.shape[1] - k) // s + 1
-        Wo = (xp.shape[2] - k) // s + 1
+        N, C = x.shape[0], x.shape[-1]
         patches = jax.lax.conv_general_dilated_patches(
-            x, (k, k), (s, s), p, dimension_numbers=("NHWC", "OIHW", "NHWC")
-        )  # (N, Ho, Wo, C*k*k) with feature order C-major?
+            x, (k, k), (s, s), p, dimension_numbers=("NHWC", "OIHW", "NHWC"))
+        Ho, Wo = patches.shape[1], patches.shape[2]
         # conv_general_dilated_patches returns features ordered (C, kh, kw)
         pm = patches.reshape(N * Ho * Wo, C, k, k).transpose(0, 2, 3, 1)
         pm = pm.reshape(N * Ho * Wo, k * k * C)

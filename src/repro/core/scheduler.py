@@ -110,7 +110,8 @@ def simulate(
     """Event-driven makespan. Big cores run [big preps in order] then the
     exec chain e_1..e_N (each e_i waits for prep_i and e_{i-1}). Little core
     j runs its queue in order. With work_stealing, an idle little core steals
-    the tail of the longest remaining queue."""
+    the TAIL of the queue with the most remaining prep time (the layer the
+    exec chain needs last) — the same rule ``PipelineRuntime`` applies."""
     N = len(exec_big)
     core_load = core_load or {}
     prep_done = [None] * N  # completion time of layer's prep
@@ -145,7 +146,7 @@ def simulate(
                     prep_little[i2] for i2 in remaining[j2]))
                 if not remaining[donor]:
                     break
-                i = remaining[donor].pop(0)
+                i = remaining[donor].pop()  # steal the tail
             t_cores[j] += prep_little[i] * core_load.get(j, 1.0)
             prep_done[i] = t_cores[j]
         t_little = list(t_cores.values())

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import ColdEngine
 from repro.core.pipeline import RunResult, OpTrace
+from repro.core.staging import stage_weights
 
 
 @dataclass
@@ -57,8 +58,10 @@ class ContinuousSession:
             raw = eng.store.read_raw(l.spec.name)
             w = kern.transform(raw, l.spec)
             with self._lock:
-                self.warm_weights[l.spec.name] = (
-                    wc.kernel, {k: jnp.asarray(v) for k, v in w.items()})
+                # stage_weights (not bare jnp.asarray): identity transforms
+                # hand back read-only mmap views, which CPU XLA would alias
+                # — leaving their disk I/O to fault in during execute
+                self.warm_weights[l.spec.name] = (wc.kernel, stage_weights(w))
 
         for i, (l, wc) in enumerate(todo):
             th = threading.Thread(target=prep, args=(l, wc), daemon=True)
@@ -97,8 +100,7 @@ class ContinuousSession:
                 else:
                     w = kern.transform(eng.store.read_raw(name), l.spec) \
                         if l.spec.weight_shapes else {}
-                w = {k: jnp.asarray(v) for k, v in w.items()}
-                y = jitted_cold[name](w, y)
+                y = jitted_cold[name](stage_weights(w), y)
             jax.block_until_ready(y)
             traces.append(OpTrace(name, "execute", "big",
                                   ts - t0, time.perf_counter() - t0))
