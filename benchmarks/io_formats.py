@@ -1,18 +1,27 @@
-"""Cold weight-read formats: per-tensor .npy vs packed bundle vs mmap bundle.
+"""Cold weight-read formats: per-tensor .npy vs packed bundle vs model-level
+super-bundle.
 
 Measures the per-layer 'weights reading' op the scheduler pipelines, across
-the three on-disk layouts the ``LayerStore`` supports:
+the on-disk layouts the ``LayerStore`` supports:
 
   npy          legacy: one file per tensor, N opens + N full copies
   bundle       packed single-blob layer file, ONE open + one sequential read
   bundle_mmap  same file, zero-copy ``np.memmap`` views — the read op is
                metadata-only; payload pages fault in later, inside
                transform/stage, off the critical exec chain
+  super        v2 model-level super-bundle: the WHOLE model in one file,
+               read through one shared mmap — ONE open per model;
+               ``super`` materializes each layer's bytes (real I/O in the
+               read op), ``super_mmap`` returns zero-copy views
+  *_touch      additionally faults every payload byte in, so a lazy row
+               can't hide I/O that merely moved downstream
 
-``bundle_mmap_touch`` additionally faults every payload byte in, so the
-mmap row can't hide I/O that merely moved downstream — it bounds the
-total cost, while ``bundle_mmap`` is what the pipelined runtime's read op
-actually pays.
+The super-bundle store is built with ``superbundle.migrate`` from the
+per-layer bundle tree, so the migration path is exercised on every run.
+Every run cross-checks tensor equivalence across all formats and counts
+the file opens a full-model sweep performs (npy: N_tensors, bundle:
+N_layers, super: 1) — both are hard failures on mismatch, which is what
+CI runs ``--smoke`` for.
 
 Workloads: cnn_zoo models (2 tensors/layer — worst case for bundling) and
 an LLM decoder graph (10+ tensors per tblock — where N-opens hurt most).
@@ -30,6 +39,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.checkpoint import LayerStore
+from repro.checkpoint.superbundle import migrate
 from repro.core.oscache import CAN_DROP, drop_page_cache
 
 try:
@@ -62,11 +72,15 @@ def _llm_weights(num_layers: int, d_model: int) -> Dict[str, dict]:
     return {l.spec.name: l.weights for l in graph if l.weights}
 
 
-def _sweep(read_fn, names: List[str], repeats: int) -> float:
+def _sweep(read_fn, names: List[str], repeats: int, reset=None) -> float:
     """Best-of-N full-model sweep: seconds to read every layer once,
-    page cache dropped first when the host allows (paper methodology)."""
+    page cache dropped first when the host allows (paper methodology).
+    ``reset`` runs before each pass (e.g. close the super-bundle's shared
+    mmap so every pass pays the cold open)."""
     best = float("inf")
     for _ in range(repeats):
+        if reset is not None:
+            reset()
         if CAN_DROP:
             drop_page_cache()
         t0 = time.perf_counter()
@@ -83,6 +97,36 @@ def _touch(w: Dict[str, np.ndarray]) -> int:
     return total
 
 
+def _count_opens(store: LayerStore, names: List[str]) -> int:
+    """File opens one cold full-model read sweep performs."""
+    store.close()
+    store.open_count = 0
+    for n in names:
+        store.read_raw(n)
+    return store.open_count
+
+
+def _check_equivalence(stores: Dict[str, LayerStore], names: List[str]):
+    """Every format must return identical tensors for every layer — a
+    mismatch is a hard failure (CI gates on it)."""
+    ref = stores["npy"]
+    for n in names:
+        want = ref.read_raw(n)
+        for label, st in stores.items():
+            if st is ref:
+                continue
+            got = st.read_raw(n, mmap=False)
+            if set(got) != set(want):
+                raise AssertionError(
+                    f"equivalence mismatch: {label}/{n} keys {set(got)} "
+                    f"!= npy keys {set(want)}")
+            for k in want:
+                if got[k].dtype != want[k].dtype or not np.array_equal(
+                        np.asarray(got[k]), np.asarray(want[k])):
+                    raise AssertionError(
+                        f"equivalence mismatch: {label}/{n}/{k}")
+
+
 def bench_model(name: str, weights: Dict[str, dict], repeats: int = 3,
                 print_csv: bool = True) -> Dict[str, float]:
     names = list(weights)
@@ -92,31 +136,73 @@ def bench_model(name: str, weights: Dict[str, dict], repeats: int = 3,
         for ln, w in weights.items():
             s_npy.write_raw(ln, w)
             s_bun.write_raw(ln, w)
+        # super store: migrated from the per-layer bundle tree, laid out in
+        # graph order — exercises the migration path every run
+        s_sup = LayerStore(Path(td) / "super", fmt="super")
+        migrate(Path(td) / "bundle", Path(td) / "super" / "model.superbundle",
+                order=names)
+
+        _check_equivalence(
+            {"npy": s_npy, "bundle": s_bun, "super": s_sup}, names)
+        opens = {
+            "npy": _count_opens(s_npy, names),
+            "bundle": _count_opens(s_bun, names),
+            "super": _count_opens(s_sup, names),
+        }
+        assert opens["super"] == 1, (
+            f"super-bundle must be ONE open per model, saw {opens['super']}")
+        assert opens["bundle"] == len(names), opens
 
         t_npy = _sweep(lambda n: s_npy.read_raw(n), names, repeats)
         t_bun = _sweep(lambda n: s_bun.read_raw(n, mmap=False), names, repeats)
         t_map = _sweep(lambda n: s_bun.read_raw(n, mmap=True), names, repeats)
         t_map_touch = _sweep(
             lambda n: _touch(s_bun.read_raw(n, mmap=True)), names, repeats)
+        t_sup = _sweep(lambda n: s_sup.read_raw(n, mmap=False), names,
+                       repeats, reset=s_sup.close)
+        t_sup_map = _sweep(lambda n: s_sup.read_raw(n, mmap=True), names,
+                           repeats, reset=s_sup.close)
+        t_sup_touch = _sweep(
+            lambda n: _touch(s_sup.read_raw(n, mmap=True)), names,
+            repeats, reset=s_sup.close)
 
     per_layer = 1.0 / max(len(names), 1)
     res = {
         "npy_s": t_npy, "bundle_s": t_bun, "bundle_mmap_s": t_map,
         "bundle_mmap_touch_s": t_map_touch,
+        "super_s": t_sup, "super_mmap_s": t_sup_map,
+        "super_mmap_touch_s": t_sup_touch,
+        "opens_npy": opens["npy"], "opens_bundle": opens["bundle"],
+        "opens_super": opens["super"],
         "speedup_bundle": t_npy / max(t_bun, 1e-9),
         "speedup_mmap": t_npy / max(t_map, 1e-9),
         "speedup_mmap_touch": t_npy / max(t_map_touch, 1e-9),
+        "speedup_super": t_npy / max(t_sup, 1e-9),
+        "speedup_super_mmap": t_npy / max(t_sup_map, 1e-9),
     }
     if print_csv:
         print(csv_line(f"io_formats/{name}/npy", t_npy * per_layer,
-                       f"layers={len(names)}"))
+                       f"layers={len(names)};opens={opens['npy']}"))
         print(csv_line(f"io_formats/{name}/bundle", t_bun * per_layer,
-                       f"speedup={res['speedup_bundle']:.2f}x"))
+                       f"speedup={res['speedup_bundle']:.2f}x"
+                       f";opens={opens['bundle']}"))
         print(csv_line(f"io_formats/{name}/bundle_mmap", t_map * per_layer,
                        f"speedup={res['speedup_mmap']:.2f}x"))
         print(csv_line(f"io_formats/{name}/bundle_mmap_touch",
                        t_map_touch * per_layer,
                        f"speedup={res['speedup_mmap_touch']:.2f}x"))
+        print(csv_line(f"io_formats/{name}/super", t_sup * per_layer,
+                       f"speedup={res['speedup_super']:.2f}x;opens=1"))
+        print(csv_line(f"io_formats/{name}/super_mmap", t_sup_map * per_layer,
+                       f"speedup={res['speedup_super_mmap']:.2f}x;opens=1"))
+        print(csv_line(f"io_formats/{name}/super_mmap_touch",
+                       t_sup_touch * per_layer,
+                       f"speedup={t_npy / max(t_sup_touch, 1e-9):.2f}x"))
+        ok = t_sup_map <= t_map
+        print(f"# {name}: super_mmap <= bundle_mmap: {ok} "
+              f"({t_sup_map * per_layer * 1e6:.1f} vs "
+              f"{t_map * per_layer * 1e6:.1f} us/layer), "
+              f"opens {opens['super']} vs {opens['bundle']}")
     return res
 
 

@@ -1,4 +1,8 @@
 from repro.checkpoint.io import LayerStore, save_pytree, load_pytree  # noqa: F401
 from repro.checkpoint.bundle import (  # noqa: F401
-    bundle_nbytes, read_bundle, read_header, write_bundle,
+    atomic_write, bundle_nbytes, read_bundle, read_header, write_bundle,
+)
+from repro.checkpoint.superbundle import (  # noqa: F401
+    SuperBundle, drop_cache_entry, migrate, read_super_header,
+    set_cache_entry, write_superbundle,
 )

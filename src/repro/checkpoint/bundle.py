@@ -66,6 +66,21 @@ def _pad_to(n: int, align: int = ALIGN) -> int:
     return (n + align - 1) // align * align
 
 
+def atomic_write(path: Path, write_fn) -> None:
+    """Publish a file atomically: ``write_fn(f)`` streams into ``<path>.tmp``,
+    which is renamed over ``path`` only on success — readers never see a torn
+    file, and a failed write never leaves the ``.tmp`` behind."""
+    path = Path(path)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+        tmp.replace(path)
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
+
+
 def write_bundle(path: Path, weights: Dict[str, np.ndarray]) -> int:
     """Write all tensors of one layer as a single packed bundle file.
     Returns the total file size in bytes."""
@@ -100,15 +115,16 @@ def write_bundle(path: Path, weights: Dict[str, np.ndarray]) -> int:
     else:  # never: guards against writing a header with stale offsets
         raise RuntimeError(f"bundle header layout did not converge: {path}")
     total = off
-    tmp = path.with_suffix(path.suffix + ".tmp")
-    with open(tmp, "wb") as f:
+
+    def _emit(f):
         f.write(struct.pack(_HEADER_FMT, MAGIC, VERSION, len(hdr_bytes)))
         f.write(hdr_bytes)
         for e, a in zip(entries, arrs):
             f.write(b"\0" * (e["offset"] - f.tell()))
             f.write(a.tobytes())
         f.write(b"\0" * (total - f.tell()))
-    tmp.replace(path)  # atomic publish: readers never see a torn bundle
+
+    atomic_write(path, _emit)
     return total
 
 

@@ -11,9 +11,22 @@ Two facilities:
     64-byte-aligned segments, read back as ONE open + one ``np.memmap``
     (zero-copy, read-only views) instead of N opens + N full copies —
     MNN-style pre-arranged layouts for sequential, cheap cold reads.
-    ``fmt="npy"`` keeps the legacy per-tensor ``.npy`` layout (one file
-    per tensor, bf16 stored as uint16 views) for format benchmarks and
-    the bundle-vs-legacy equivalence tests.
+    ``fmt="super"`` goes one step further (``checkpoint/superbundle.py``):
+    the whole model — raw weights and the per-kernel §3.1.2 cache — lives
+    in ONE file (``model.superbundle``) behind one shared mmap; reads are
+    zero-copy views into it and ``readahead()`` issues madvise(WILLNEED)
+    hints for the layers a plan touches first. Writes are buffered: raw
+    installs and first-time cache materializations coalesce into ONE
+    atomic container rewrite at the next flush point (raw read /
+    accounting / readahead), while replacing a cache entry already in the
+    container goes through the super-bundle's in-place/rewrite-on-grow
+    path. ``fmt="npy"`` keeps the legacy per-tensor ``.npy`` layout (one
+    file per tensor, bf16 stored as uint16 views) for format benchmarks
+    and the bundle-vs-legacy equivalence tests.
+
+    ``open_count`` tracks the file opens the read path performs (the
+    number the cold-I/O benchmarks compare across formats: N_tensors for
+    npy, N_layers for bundle, 1 per model for super).
 
   * pytree checkpointing (``save_pytree``/``load_pytree``) for the training
     loop — flat .npy files keyed by the pytree path.
@@ -23,11 +36,14 @@ from __future__ import annotations
 import json
 import shutil
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.checkpoint.bundle import read_bundle, write_bundle
+from repro.checkpoint.superbundle import (
+    SuperBundle, drop_cache_entry, set_cache_entry, write_superbundle,
+)
 
 
 def _safe(name: str) -> str:
@@ -65,16 +81,100 @@ def _load_dir(d: Path) -> Dict[str, np.ndarray]:
 
 class LayerStore:
     """Per-layer weight store. ``fmt="bundle"`` (default) packs each layer
-    into one aligned blob; reads default to zero-copy mmap views
-    (``mmap=False`` forces one materializing sequential read)."""
+    into one aligned blob; ``fmt="super"`` packs the whole model into one;
+    reads default to zero-copy mmap views (``mmap=False`` forces a
+    materializing read that pays the byte movement up front)."""
 
     def __init__(self, root: Path, *, fmt: str = "bundle", mmap: bool = True):
-        assert fmt in ("bundle", "npy"), fmt
+        assert fmt in ("bundle", "npy", "super"), fmt
         self.root = Path(root)
         self.fmt = fmt
         self.mmap = mmap
+        self.open_count = 0  # file opens performed by reads
         (self.root / "raw").mkdir(parents=True, exist_ok=True)
         (self.root / "cache").mkdir(parents=True, exist_ok=True)
+        if fmt == "super":
+            self._super_path = self.root / "model.superbundle"
+            self._pending_raw: Dict[str, Dict[str, np.ndarray]] = {}
+            self._pending_cache: Dict[Tuple[str, str], Dict[str, np.ndarray]] = {}
+            self._pending_drop: Set[Tuple[str, str]] = set()
+            self._order: List[str] = []  # write order == graph order
+            self._reader: Optional[SuperBundle] = None
+
+    # -- super-bundle plumbing ----------------------------------------------
+    def _super_dirty(self) -> bool:
+        return bool(self._pending_raw or self._pending_cache
+                    or self._pending_drop)
+
+    def _invalidate_reader(self):
+        if self._reader is not None:
+            self._reader.close()
+            self._reader = None
+
+    def close(self):
+        """Release the shared super-bundle mmap (the next read reopens it) —
+        lets benchmarks measure truly cold opens. No-op for other fmts."""
+        if self.fmt == "super":
+            self._invalidate_reader()
+
+    def _super_flush(self):
+        """Merge all buffered writes/drops into the container in ONE atomic
+        rewrite (write_raw during model install is buffered so an N-layer
+        install costs one rewrite, not N)."""
+        if not self._super_dirty():
+            return
+        raw: Dict[str, Dict[str, np.ndarray]] = {}
+        cache: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
+        order: List[str] = []
+        sb = (SuperBundle(self._super_path)
+              if self._super_path.exists() else None)
+        try:
+            if sb is not None:
+                order = list(sb.order)
+                raw = {l: sb.read_raw(l) for l in order}
+                cache = {l: {k: sb.read_cached(l, k)
+                             for k in sb.kernels_cached(l)} for l in order}
+            for l, w in self._pending_raw.items():
+                raw[l] = w
+            for l in self._order:
+                if l not in order:
+                    order.append(l)
+            for (l, k) in self._pending_drop:
+                cache.get(l, {}).pop(k, None)
+            for (l, k), w in self._pending_cache.items():
+                cache.setdefault(l, {})[k] = w
+                raw.setdefault(l, {})
+                if l not in order:
+                    order.append(l)
+            write_superbundle(self._super_path, raw, cache, order=order)
+        finally:
+            if sb is not None:
+                sb.close()
+        self._pending_raw.clear()
+        self._pending_cache.clear()
+        self._pending_drop.clear()
+        self._invalidate_reader()
+
+    def _super(self, *, flush_all: bool = False) -> Optional[SuperBundle]:
+        """The shared reader. Pending RAW writes force a flush (raw reads
+        must see them in the file); pending cache writes/drops do NOT —
+        cache queries are served from the buffers until something needs the
+        file complete (``flush_all``), which keeps an N-layer cache
+        materialization at one container rewrite instead of N."""
+        if flush_all or self._pending_raw:
+            self._super_flush()
+        if self._reader is None and self._super_path.exists():
+            self._reader = SuperBundle(self._super_path)
+            self.open_count += 1
+        return self._reader
+
+    def readahead(self, layers) -> int:
+        """madvise(WILLNEED)-style hints for the layers a plan touches
+        first. Effective for ``fmt="super"``; 0 otherwise."""
+        if self.fmt != "super":
+            return 0
+        sb = self._super(flush_all=True)
+        return sb.advise_willneed(list(layers)) if sb is not None else 0
 
     # -- layout -------------------------------------------------------------
     def _raw_path(self, layer: str) -> Path:
@@ -100,17 +200,34 @@ class LayerStore:
             return {}  # weightless (stateless) layers have no file on disk
         if self.fmt == "bundle":
             use = self.mmap if mmap is None else mmap
+            self.open_count += 1
             return read_bundle(path, mmap=use)
+        self.open_count += sum(1 for _ in path.glob("*.npy"))
         return _load_dir(path)
 
     # -- raw weights --------------------------------------------------------
     def write_raw(self, layer: str, weights: Dict[str, np.ndarray]):
+        if self.fmt == "super":
+            self._pending_raw[layer] = {
+                k: np.asarray(v) for k, v in weights.items()}
+            if layer not in self._order:
+                self._order.append(layer)
+            return
         self._write(self._raw_path(layer), weights)
 
     def read_raw(self, layer: str, *, mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
+        if self.fmt == "super":
+            sb = self._super()
+            if sb is None:
+                return {}
+            use = self.mmap if mmap is None else mmap
+            return sb.read_raw(layer, materialize=not use)
         return self._read(self._raw_path(layer), mmap)
 
     def raw_bytes(self, layer: str) -> int:
+        if self.fmt == "super":
+            sb = self._super()
+            return sb.raw_nbytes(layer) if sb is not None else 0
         p = self._raw_path(layer)
         if self.fmt == "bundle":
             return p.stat().st_size if p.exists() else 0
@@ -118,16 +235,63 @@ class LayerStore:
 
     # -- post-transformed cache (§3.1.2) ------------------------------------
     def write_cached(self, layer: str, kernel: str, weights: Dict[str, np.ndarray]):
+        if self.fmt == "super":
+            self._pending_drop.discard((layer, kernel))
+            if (not self._super_dirty() and self._super_path.exists()
+                    and self.has_cached(layer, kernel)):
+                # replacing an entry already in the container: go through
+                # the in-place / rewrite-on-grow path directly
+                self._invalidate_reader()
+                set_cache_entry(self._super_path, layer, kernel, weights)
+            else:
+                # first materialization: buffer, so N layers' cache entries
+                # land in ONE rewrite at the next full flush instead of N
+                self._pending_cache[(layer, kernel)] = {
+                    k: np.asarray(v) for k, v in weights.items()}
+                if layer not in self._order:
+                    self._order.append(layer)
+            return
         self._write(self._cache_path(layer, kernel), weights)
 
     def read_cached(self, layer: str, kernel: str, *,
                     mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
+        if self.fmt == "super":
+            if (layer, kernel) in self._pending_drop:
+                return {}
+            use = self.mmap if mmap is None else mmap
+            pend = self._pending_cache.get((layer, kernel))
+            if pend is not None:
+                # serve the buffered entry without forcing a flush (copies
+                # under mmap=False so callers may mutate freely)
+                return ({k: np.array(v) for k, v in pend.items()}
+                        if not use else dict(pend))
+            sb = self._super()
+            if sb is None:
+                return {}
+            return sb.read_cached(layer, kernel, materialize=not use)
         return self._read(self._cache_path(layer, kernel), mmap)
 
     def has_cached(self, layer: str, kernel: str) -> bool:
+        if self.fmt == "super":
+            if (layer, kernel) in self._pending_cache:
+                return True
+            if (layer, kernel) in self._pending_drop:
+                return False
+            if not self._super_path.exists():
+                return False
+            sb = self._super()
+            return sb is not None and sb.has_cached(layer, kernel)
         return self._cache_path(layer, kernel).exists()
 
     def drop_cached(self, layer: str, kernel: str):
+        if self.fmt == "super":
+            self._pending_cache.pop((layer, kernel), None)
+            if self._super_dirty():
+                self._pending_drop.add((layer, kernel))
+            elif self._super_path.exists():
+                self._invalidate_reader()
+                drop_cache_entry(self._super_path, layer, kernel)
+            return
         p = self._cache_path(layer, kernel)
         if p.is_dir():
             shutil.rmtree(p)
@@ -136,10 +300,20 @@ class LayerStore:
 
     # -- storage accounting (real on-disk footprint) ------------------------
     def cache_bytes(self) -> int:
+        if self.fmt == "super":
+            sb = self._super(flush_all=True)
+            return sb.cache_disk_bytes() if sb is not None else 0
         return sum(p.stat().st_size
                    for p in (self.root / "cache").rglob("*") if p.is_file())
 
     def model_bytes(self) -> int:
+        # for super, model + cache sums to the container's real file size
+        # (header/slack/padding are attributed to the model side)
+        if self.fmt == "super":
+            sb = self._super(flush_all=True)
+            if sb is None:
+                return 0
+            return sb.file_size() - sb.cache_disk_bytes()
         return sum(p.stat().st_size
                    for p in (self.root / "raw").rglob("*") if p.is_file())
 
@@ -149,6 +323,7 @@ class LayerStore:
 # ---------------------------------------------------------------------------
 def save_pytree(root: Path, tree: Any):
     import jax
+    import ml_dtypes
 
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
@@ -159,13 +334,19 @@ def save_pytree(root: Path, tree: Any):
         fname = f"leaf_{i:05d}.npy"
         arr = np.asarray(leaf)
         dtype_str = str(arr.dtype)
-        if arr.dtype.kind == "V" or "bfloat16" in dtype_str:
+        if arr.dtype == ml_dtypes.bfloat16:
             # numpy can't round-trip bf16 via .npy: store widened to f32,
             # the recorded dtype restores it on load
             import jax.numpy as jnp
 
             arr = np.asarray(jnp.asarray(leaf, jnp.float32))
             dtype_str = "bfloat16"
+        elif arr.dtype.kind == "V":
+            # any other void-kind dtype (structured, or a non-bf16
+            # ml_dtypes extension) would be silently widened/mislabeled
+            raise TypeError(
+                f"save_pytree: unsupported dtype {arr.dtype} at {key!r} — "
+                "only numpy-native dtypes and bfloat16 round-trip")
         np.save(root / fname, arr, allow_pickle=False)
         index.append({"key": key, "file": fname, "dtype": dtype_str})
     (root / "index.json").write_text(json.dumps(

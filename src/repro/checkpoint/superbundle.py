@@ -1,0 +1,402 @@
+"""Model-level super-bundles — the cold path's v2 on-disk container.
+
+PR 1's per-layer bundles turned N-tensor layer loads into one open *per
+layer*; the super-bundle turns a whole model into ONE open + ONE shared
+mmap: every layer's tensors — raw weights AND the §3.1.2 post-transformed
+per-kernel cache — live in a single file, laid out in plan/graph order so
+the exec chain's cold sweep reads the file front to back.
+
+Layout (format version 2)::
+
+    [0:4)     magic  b"NNVS"
+    [4:8)     format version (uint32 LE, = 2)
+    [8:16)    header length in bytes (uint64 LE)
+    [16:16+H) header — UTF-8 JSON:
+              {"order":  [layer, ...],          # plan/graph order
+               "layers": {layer: {
+                   "raw":   [{"name","dtype","shape","offset","nbytes"}],
+                   "cache": {kernel: [{same-entry-shape}, ...]}}}}
+    ...       zero padding to the first 64-byte boundary; the header
+              region carries HEADER_SLACK spare bytes so small metadata
+              updates can be committed in place
+    segments  tensor payloads, each starting on a 64-byte boundary,
+              grouped layer-after-layer in ``order`` (a layer's raw
+              tensors and its cache entries are adjacent)
+
+Offsets are absolute from the start of the file. Dtypes are tagged by
+name; bfloat16 is stored natively and resolved through ``ml_dtypes`` on
+read, exactly as in v1 per-layer bundles.
+
+Reading: ``SuperBundle`` holds the single read-only mmap; ``read_raw`` /
+``read_cached`` return zero-copy views into it (``materialize=True``
+copies the segment out, paying the page-in cost up front — what a
+sequential baseline's "read" op must do). ``advise_willneed`` issues
+``madvise(MADV_WILLNEED)`` on the extents of the layers a plan will touch
+first, so the kernel readahead runs ahead of the prep pipeline.
+
+Mutation: ``set_cache_entry`` replaces a layer's post-transformed cache
+IN PLACE when the new payload fits the existing segment slots and the
+updated header fits the header region; otherwise it falls back to
+rewrite-on-grow — the whole container is regenerated through the same
+``atomic_write`` tmp+rename publish as v1 bundles, so readers never see a
+torn file. The in-place fast path is NOT crash-atomic (payload bytes are
+written first, header metadata last): a crash mid-write can tear the
+entry. It is only ever taken for the §3.1.2 cache — derived data the
+engine's decide() re-materializes from raw weights — and raw sections are
+only ever published through the atomic rewrite path; a journaled/
+checksummed in-place commit is a ROADMAP follow-up. ``drop_cache_entry``
+always rewrites, which also compacts the dead segments out. Replacing an
+entry in place invalidates views of that entry handed out earlier (they
+alias the same pages).
+
+``migrate`` converts a per-layer bundle ``LayerStore`` tree (``raw/
+*.bundle`` + ``cache/<kernel>/*.bundle``) into one super-bundle.
+"""
+from __future__ import annotations
+
+import json
+import mmap as mmap_mod
+import struct
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint.bundle import (
+    ALIGN, _HEADER_FIXED, _HEADER_FMT, _dtype_from_tag, _dtype_tag, _pad_to,
+    atomic_write, read_bundle,
+)
+
+MAGIC = b"NNVS"
+VERSION = 2
+# spare header bytes so in-place cache replacement survives small metadata
+# growth (shape/nbytes digit changes) without forcing a rewrite
+HEADER_SLACK = 256
+
+LayerWeights = Dict[str, np.ndarray]
+
+
+def _payload(weights: LayerWeights) -> Tuple[List[dict], List[np.ndarray]]:
+    """Name-sorted (header entries, contiguous arrays) for one section."""
+    entries: List[dict] = []
+    arrs: List[np.ndarray] = []
+    for name in sorted(weights):
+        a = np.ascontiguousarray(np.asarray(weights[name]))
+        entries.append({"name": name, "dtype": _dtype_tag(a.dtype),
+                        "shape": list(a.shape), "nbytes": int(a.nbytes)})
+        arrs.append(a)
+    return entries, arrs
+
+
+def write_superbundle(
+    path: Path,
+    raw: Dict[str, LayerWeights],
+    cache: Optional[Dict[str, Dict[str, LayerWeights]]] = None,
+    order: Optional[Sequence[str]] = None,
+) -> int:
+    """Write the whole model as one super-bundle (atomic tmp+rename).
+    ``order`` fixes the on-disk layer layout (plan/graph order); layers
+    not listed are appended. Returns the total file size in bytes."""
+    path = Path(path)
+    cache = cache or {}
+    order = list(order) if order is not None else list(raw)
+    order += [l for l in raw if l not in order]
+    order += sorted(set(cache) - set(order))
+
+    layers_hdr: Dict[str, dict] = {}
+    flat: List[Tuple[dict, np.ndarray]] = []
+    for layer in order:
+        ent_raw, arrs = _payload(raw.get(layer, {}))
+        sect = {"raw": ent_raw, "cache": {}}
+        flat += list(zip(ent_raw, arrs))
+        for kern in sorted(cache.get(layer, {})):
+            ent_c, arrs_c = _payload(cache[layer][kern])
+            sect["cache"][kern] = ent_c
+            flat += list(zip(ent_c, arrs_c))
+        layers_hdr[layer] = sect
+    header = {"order": order, "layers": layers_hdr}
+
+    # offsets depend on the header length which depends on the offsets'
+    # digit count — fixed-point iterate, as in the v1 bundle writer
+    for _ in range(8):
+        hdr_bytes = json.dumps(header, separators=(",", ":")).encode()
+        off = _pad_to(_HEADER_FIXED + len(hdr_bytes) + HEADER_SLACK)
+        changed = False
+        for e, _a in flat:
+            if e.get("offset") != off:
+                e["offset"] = off
+                changed = True
+            off = _pad_to(off + e["nbytes"])
+        if not changed:
+            break
+    else:
+        raise RuntimeError(
+            f"super-bundle header layout did not converge: {path}")
+    total = off
+
+    def _emit(f):
+        f.write(struct.pack(_HEADER_FMT, MAGIC, VERSION, len(hdr_bytes)))
+        f.write(hdr_bytes)
+        for e, a in flat:
+            f.write(b"\0" * (e["offset"] - f.tell()))
+            f.write(a.tobytes())
+        f.write(b"\0" * (total - f.tell()))
+
+    atomic_write(path, _emit)
+    return total
+
+
+def _parse_super_header(buf) -> dict:
+    magic, version, hlen = struct.unpack_from(_HEADER_FMT, buf, 0)
+    if magic != MAGIC:
+        raise ValueError(f"not a super-bundle (magic={magic!r})")
+    if version > VERSION:
+        raise ValueError(f"super-bundle version {version} > {VERSION}")
+    return json.loads(bytes(buf[_HEADER_FIXED:_HEADER_FIXED + hlen]).decode())
+
+
+def read_super_header(path: Path) -> dict:
+    with open(path, "rb") as f:
+        magic, version, hlen = struct.unpack(
+            _HEADER_FMT, f.read(_HEADER_FIXED))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: not a super-bundle (magic={magic!r})")
+        if version > VERSION:
+            raise ValueError(
+                f"{path}: super-bundle version {version} > {VERSION}")
+        return json.loads(f.read(hlen).decode())
+
+
+class SuperBundle:
+    """ONE open + ONE shared read-only mmap for a whole model; every
+    ``read_raw``/``read_cached`` is a dict of zero-copy views into it."""
+
+    def __init__(self, path: Path):
+        self.path = Path(path)
+        with open(self.path, "rb") as f:
+            self._mm = mmap_mod.mmap(f.fileno(), 0,
+                                     access=mmap_mod.ACCESS_READ)
+        self._buf = np.frombuffer(self._mm, dtype=np.uint8)
+        self.header = _parse_super_header(self._buf)
+        self.order: List[str] = list(self.header["order"])
+        self._layers: Dict[str, dict] = self.header["layers"]
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self):
+        self._buf = None
+        try:
+            self._mm.close()
+        except BufferError:
+            pass  # live views pin the map; the GC reclaims it with them
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- introspection ------------------------------------------------------
+    def has_raw(self, layer: str) -> bool:
+        return layer in self._layers
+
+    def has_cached(self, layer: str, kernel: str) -> bool:
+        return kernel in self._layers.get(layer, {}).get("cache", {})
+
+    def kernels_cached(self, layer: str) -> List[str]:
+        return list(self._layers.get(layer, {}).get("cache", {}))
+
+    def _all_entries(self, layer: str) -> List[dict]:
+        sect = self._layers.get(layer)
+        if sect is None:
+            return []
+        out = list(sect["raw"])
+        for ents in sect.get("cache", {}).values():
+            out += ents
+        return out
+
+    def extent(self, layer: str) -> Optional[Tuple[int, int]]:
+        """Byte range covering all of a layer's segments (raw + cache)."""
+        ents = self._all_entries(layer)
+        if not ents:
+            return None
+        return (min(e["offset"] for e in ents),
+                max(e["offset"] + e["nbytes"] for e in ents))
+
+    # -- reads --------------------------------------------------------------
+    def _views(self, entries: List[dict], materialize: bool) -> LayerWeights:
+        out: LayerWeights = {}
+        for e in entries:
+            seg = self._buf[e["offset"]: e["offset"] + e["nbytes"]]
+            v = seg.view(_dtype_from_tag(e["dtype"])).reshape(e["shape"])
+            out[e["name"]] = np.array(v) if materialize else v
+        return out
+
+    def read_raw(self, layer: str, *, materialize: bool = False) -> LayerWeights:
+        sect = self._layers.get(layer)
+        return self._views(sect["raw"], materialize) if sect else {}
+
+    def read_cached(self, layer: str, kernel: str, *,
+                    materialize: bool = False) -> LayerWeights:
+        ents = self._layers.get(layer, {}).get("cache", {}).get(kernel)
+        return self._views(ents, materialize) if ents is not None else {}
+
+    # -- readahead ----------------------------------------------------------
+    def advise_willneed(self, layers: Optional[Sequence[str]] = None) -> int:
+        """``madvise(MADV_WILLNEED)`` the extents of the given layers (the
+        first-k of the plan) so the kernel prefetches ahead of the prep
+        pipeline. Returns the number of layers hinted (0 where madvise is
+        unavailable)."""
+        if not hasattr(self._mm, "madvise"):
+            return 0
+        page = mmap_mod.PAGESIZE
+        hinted = 0
+        for layer in (self.order if layers is None else layers):
+            ext = self.extent(layer)
+            if ext is None:
+                continue
+            lo = ext[0] // page * page
+            try:
+                self._mm.madvise(mmap_mod.MADV_WILLNEED, lo, ext[1] - lo)
+                hinted += 1
+            except (ValueError, OSError):
+                pass
+        return hinted
+
+    # -- payload accounting --------------------------------------------------
+    def raw_nbytes(self, layer: Optional[str] = None) -> int:
+        layers = [layer] if layer is not None else self.order
+        return sum(e["nbytes"] for l in layers
+                   for e in self._layers.get(l, {"raw": []})["raw"])
+
+    def cache_nbytes(self) -> int:
+        return sum(e["nbytes"] for l in self.order
+                   for ents in self._layers[l].get("cache", {}).values()
+                   for e in ents)
+
+    # -- on-disk accounting ---------------------------------------------------
+    def file_size(self) -> int:
+        return len(self._buf)
+
+    def cache_disk_bytes(self) -> int:
+        """Disk bytes the cache sections occupy (padded 64-byte slots), so
+        ``model + cache`` accounting sums to the real file size."""
+        return sum(_pad_to(e["nbytes"]) for l in self.order
+                   for ents in self._layers[l].get("cache", {}).values()
+                   for e in ents)
+
+
+# ---------------------------------------------------------------------------
+# mutation: in-place cache replace / rewrite-on-grow / drop
+# ---------------------------------------------------------------------------
+def _load_all(sb: SuperBundle):
+    raw = {l: sb.read_raw(l) for l in sb.order}
+    cache = {l: {k: sb.read_cached(l, k) for k in sb.kernels_cached(l)}
+             for l in sb.order}
+    return raw, cache
+
+
+def _slot_sizes(sb: SuperBundle) -> Dict[int, int]:
+    """id(entry) -> writable slot size (distance to the next segment or to
+    EOF) — how far an in-place replacement may grow without moving data."""
+    all_e = sorted((e for l in sb.order for e in sb._all_entries(l)),
+                   key=lambda e: e["offset"])
+    size = len(sb._buf)
+    slots: Dict[int, int] = {}
+    for e, nxt in zip(all_e, all_e[1:] + [None]):
+        end = nxt["offset"] if nxt is not None else size
+        slots[id(e)] = end - e["offset"]
+    return slots
+
+
+def _try_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
+                 entries_new: List[dict], arrs: List[np.ndarray]) -> bool:
+    old = sb._layers[layer]["cache"][kernel]
+    if [e["name"] for e in old] != [e["name"] for e in entries_new]:
+        return False
+    slots = _slot_sizes(sb)
+    if any(en["nbytes"] > slots[id(eo)] for eo, en in zip(old, entries_new)):
+        return False
+    # candidate header on a deep copy — sb.header must stay untouched unless
+    # the in-place path actually commits
+    hdr = json.loads(json.dumps(sb.header))
+    for eo, en in zip(hdr["layers"][layer]["cache"][kernel], entries_new):
+        eo.update(dtype=en["dtype"], shape=en["shape"], nbytes=en["nbytes"])
+    hdr_bytes = json.dumps(hdr, separators=(",", ":")).encode()
+    first_off = min(e["offset"] for l in sb.order for e in sb._all_entries(l))
+    if _HEADER_FIXED + len(hdr_bytes) > first_off:
+        return False
+    offsets = [e["offset"] for e in old]
+    with open(path, "r+b") as f:
+        for off, a in zip(offsets, arrs):
+            f.seek(off)
+            f.write(a.tobytes())
+        f.seek(0)
+        f.write(struct.pack(_HEADER_FMT, MAGIC, VERSION, len(hdr_bytes)))
+        f.write(hdr_bytes)
+        f.write(b"\0" * (first_off - _HEADER_FIXED - len(hdr_bytes)))
+    return True
+
+
+def set_cache_entry(path: Path, layer: str, kernel: str,
+                    weights: LayerWeights) -> str:
+    """Append/replace one layer's post-transformed cache entry. In-place
+    when the payload fits the existing slots and the header region; else
+    rewrite-on-grow (atomic tmp+rename). Returns ``"inplace"`` or
+    ``"rewrite"``."""
+    path = Path(path)
+    entries_new, arrs = _payload(weights)
+    with SuperBundle(path) as sb:
+        if (sb.has_cached(layer, kernel)
+                and _try_inplace(path, sb, layer, kernel, entries_new, arrs)):
+            return "inplace"
+        raw, cache = _load_all(sb)
+        order = list(sb.order)
+        if layer not in order:
+            order.append(layer)
+            raw.setdefault(layer, {})
+        cache.setdefault(layer, {})[kernel] = dict(
+            zip([e["name"] for e in entries_new], arrs))
+        write_superbundle(path, raw, cache, order=order)
+    return "rewrite"
+
+
+def drop_cache_entry(path: Path, layer: str, kernel: str) -> bool:
+    """Remove a cache entry; rewrites (and thereby compacts) the file.
+    Returns whether the entry existed."""
+    path = Path(path)
+    with SuperBundle(path) as sb:
+        if not sb.has_cached(layer, kernel):
+            return False
+        raw, cache = _load_all(sb)
+        del cache[layer][kernel]
+        write_superbundle(path, raw, cache, order=sb.order)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# migration: per-layer bundle LayerStore tree -> one super-bundle
+# ---------------------------------------------------------------------------
+def migrate(src_root: Path, dest: Path,
+            order: Optional[Sequence[str]] = None) -> Path:
+    """Convert a per-layer bundle store (``raw/*.bundle`` +
+    ``cache/<kernel>/*.bundle``) into one super-bundle at ``dest`` (a file
+    path, or a directory that receives ``model.superbundle``). Layer names
+    are recovered from bundle file stems — names whose ``/`` was flattened
+    to ``_`` on write stay flattened."""
+    src = Path(src_root)
+    dest = Path(dest)
+    if dest.is_dir():
+        dest = dest / "model.superbundle"
+    raw: Dict[str, LayerWeights] = {}
+    for p in sorted((src / "raw").glob("*.bundle")):
+        raw[p.name[: -len(".bundle")]] = read_bundle(p, mmap=True)
+    cache: Dict[str, Dict[str, LayerWeights]] = {}
+    cdir = src / "cache"
+    if cdir.exists():
+        for kdir in sorted(d for d in cdir.iterdir() if d.is_dir()):
+            for p in sorted(kdir.glob("*.bundle")):
+                layer = p.name[: -len(".bundle")]
+                cache.setdefault(layer, {})[kdir.name] = read_bundle(
+                    p, mmap=True)
+    write_superbundle(dest, raw, cache, order=order)
+    return dest

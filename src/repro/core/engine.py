@@ -55,10 +55,11 @@ class ColdEngine:
         core_model: CoreModel = CoreModel(),
         allow_lossy: bool = False,
         shader_cache: bool = True,
+        store_fmt: str = "bundle",
     ):
         self.layers = layers
         self.specs = [l.spec for l in layers]
-        self.store = LayerStore(Path(store_dir))
+        self.store = LayerStore(Path(store_dir), fmt=store_fmt)
         self.core_model = core_model
         self.allow_lossy = allow_lossy
         self.compile_cache = CompileCache(

@@ -91,6 +91,19 @@ class PipelineRuntime:
     # -- device staging (the new prep tail) ---------------------------------
     _device_put = staticmethod(stage_weights)
 
+    def _hint_readahead(self, layers: List[str]):
+        """Super-bundle stores can madvise(WILLNEED) the extents the plan
+        touches first, so kernel readahead runs ahead of the prep threads."""
+        ra = getattr(self.store, "readahead", None)
+        if ra is None:
+            return
+        seen, first = set(), []
+        for n in layers:
+            if n not in seen:
+                seen.add(n)
+                first.append(n)
+        ra(first)
+
     # -- one preparation op (read [+ transform] + stage) --------------------
     def _prepare(self, layer: str, weights_out: Dict[str, Any],
                  traces: List[OpTrace], core: str, t0: float, lock,
@@ -139,6 +152,11 @@ class PipelineRuntime:
 
         queues = [[self.order[i] for i in q] for q in plan.little_queues]
         qlock = threading.Lock()
+        stagers: List[threading.Thread] = []
+        self._hint_readahead(
+            [q[0] for q in queues if q]
+            + [self.order[i] for i in plan.big_prep]
+            + self.order[: 2 * (len(queues) + 1)])
 
         def stage(name: str, core: str):
             """Stage one prepped layer onto the device (idempotent)."""
@@ -198,9 +216,12 @@ class PipelineRuntime:
             if self.prefetch and i + 1 < len(self.order):
                 nxt = self.order[i + 1]
                 if done_events[nxt].is_set() and not staged[nxt].is_set():
-                    # overlap layer i+1's device transfer with e_i
-                    threading.Thread(target=stage, args=(nxt, "stager"),
-                                     daemon=True).start()
+                    # overlap layer i+1's device transfer with e_i; tracked
+                    # so its 'stage' trace lands before RunResult is built
+                    th = threading.Thread(target=stage, args=(nxt, "stager"),
+                                          daemon=True)
+                    stagers.append(th)
+                    th.start()
             staged[name].wait()
             with lock:
                 w = weights[name]
@@ -211,6 +232,8 @@ class PipelineRuntime:
             traces.append(OpTrace(name, "execute", "big", ts - t0, te - t0))
         for th in threads:
             th.join()
+        for th in stagers:
+            th.join()
         return RunResult(output=y, total_s=time.perf_counter() - t0,
                          traces=traces, weights=weights)
 
@@ -220,9 +243,15 @@ class PipelineRuntime:
         t0 = time.perf_counter()
         traces: List[OpTrace] = []
         weights: Dict[str, Any] = {}
+        self._hint_readahead(self.order)
         for name in self.order:           # read all
             ts = time.perf_counter()
-            weights[name] = self.store.read_raw(name) if self.specs[name].weight_shapes else {}
+            # mmap=False: the ncnn-like baseline's read op must move the
+            # layer's bytes off the disk — a lazy mmap view would make the
+            # 'read' trace metadata-only and silently shift the disk cost
+            # into transform/stage, corrupting the breakdown
+            weights[name] = (self.store.read_raw(name, mmap=False)
+                             if self.specs[name].weight_shapes else {})
             traces.append(OpTrace(name, "read", "big", ts - t0, time.perf_counter() - t0))
         for name in self.order:           # transform all
             if not self.specs[name].weight_shapes:

@@ -61,6 +61,27 @@ def test_pytree_checkpoint_roundtrip(tmp_path):
                                   np.asarray(tree["b"]["c"]))
 
 
+def test_pytree_checkpoint_bf16_values_roundtrip(tmp_path):
+    """bf16 leaves are detected explicitly (ml_dtypes), widened to f32 on
+    disk, and restored to bf16 with identical values on load."""
+    rng = np.random.default_rng(7)
+    vals = jnp.asarray(rng.standard_normal((4, 5)), jnp.bfloat16)
+    tree = {"w": vals}
+    save_pytree(tmp_path / "ckpt", tree)
+    back = load_pytree(tmp_path / "ckpt", tree)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"]).view(np.uint16),
+                                  np.asarray(vals).view(np.uint16))
+
+
+def test_pytree_checkpoint_rejects_structured_dtypes(tmp_path):
+    """Regression: any void-kind dtype used to be silently widened and
+    mislabeled as bfloat16; structured dtypes must raise instead."""
+    bad = np.zeros(3, dtype=np.dtype([("a", np.int32), ("b", np.float32)]))
+    with pytest.raises(TypeError, match="unsupported dtype"):
+        save_pytree(tmp_path / "ckpt", {"bad": bad})
+
+
 def test_pipeline_deterministic_and_microbatched():
     cfg = get_config("smollm-360m").reduced()
     p1 = SyntheticPipeline(cfg, batch=8, seq=16, microbatches=2, seed=3)

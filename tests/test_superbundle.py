@@ -1,0 +1,283 @@
+"""Model-level super-bundle (v2 container) tests.
+
+Covers: raw+cache round-trips across dtypes (incl. native bf16),
+empty-weights layers and dotted layer names, 64-byte alignment and
+plan-order sequential layout, in-place cache replace vs rewrite-on-grow,
+drop/compaction, migration from per-layer bundles, LayerStore
+``fmt="super"`` equivalence with ``fmt="bundle"``, the one-open-per-model
+property, readahead hints, and a full ColdEngine run on a super store.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import LayerStore
+from repro.checkpoint.bundle import ALIGN
+from repro.checkpoint.superbundle import (
+    HEADER_SLACK, SuperBundle, drop_cache_entry, migrate, read_super_header,
+    set_cache_entry, write_superbundle,
+)
+
+
+def _model_weights():
+    import ml_dtypes
+
+    rng = np.random.default_rng(0)
+    return {
+        "block.0": {
+            "w": rng.standard_normal((17, 33)).astype(np.float32),
+            "b": rng.standard_normal(33).astype(np.float32),
+        },
+        "block.1": {
+            "hb": rng.standard_normal((12, 8)).astype(np.float32)
+                  .astype(ml_dtypes.bfloat16),
+            "q8": (rng.standard_normal((5, 9)) * 20).astype(np.int8),
+        },
+        "empty": {},  # weightless layer: present, no tensors
+    }
+
+
+@pytest.mark.parametrize("materialize", [False, True])
+def test_superbundle_roundtrip(tmp_path, materialize):
+    import ml_dtypes
+
+    w = _model_weights()
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, w, order=list(w))
+    with SuperBundle(p) as sb:
+        assert sb.order == list(w)
+        for layer, tensors in w.items():
+            back = sb.read_raw(layer, materialize=materialize)
+            assert set(back) == set(tensors)
+            for k in tensors:
+                assert back[k].dtype == tensors[k].dtype, (layer, k)
+                np.testing.assert_array_equal(
+                    np.asarray(back[k]), np.asarray(tensors[k]))
+        assert sb.read_raw("block.1")["hb"].dtype == ml_dtypes.bfloat16
+        assert sb.read_raw("empty") == {}
+        assert sb.read_raw("no_such_layer") == {}
+
+
+def test_superbundle_alignment_and_sequential_layout(tmp_path):
+    w = _model_weights()
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, w, order=["block.0", "block.1", "empty"])
+    hdr = read_super_header(p)
+    assert hdr["order"] == ["block.0", "block.1", "empty"]
+    offsets = []
+    for layer in hdr["order"]:
+        for e in hdr["layers"][layer]["raw"]:
+            assert e["offset"] % ALIGN == 0
+            offsets.append(e["offset"])
+    # layers laid out in order -> a cold sweep reads the file front to back
+    assert offsets == sorted(offsets)
+
+
+def test_cache_entry_inplace_vs_rewrite_on_grow(tmp_path):
+    w = _model_weights()
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, w, order=list(w))
+    c1 = {"w": np.zeros((17, 33), np.float32)}
+    assert set_cache_entry(p, "block.0", "kA", c1) == "rewrite"  # append grows
+    size1 = p.stat().st_size
+    c2 = {"w": np.full((17, 33), 3.0, np.float32)}
+    assert set_cache_entry(p, "block.0", "kA", c2) == "inplace"  # fits slot
+    assert p.stat().st_size == size1
+    with SuperBundle(p) as sb:
+        np.testing.assert_array_equal(
+            np.asarray(sb.read_cached("block.0", "kA")["w"]), c2["w"])
+        # neighbors untouched by the in-place write
+        np.testing.assert_array_equal(
+            np.asarray(sb.read_raw("block.0")["w"]), w["block.0"]["w"])
+    c3 = {"w": np.ones((170, 33), np.float32)}
+    assert set_cache_entry(p, "block.0", "kA", c3) == "rewrite"  # grew
+    with SuperBundle(p) as sb:
+        assert sb.read_cached("block.0", "kA")["w"].shape == (170, 33)
+        np.testing.assert_array_equal(
+            np.asarray(sb.read_raw("block.1")["q8"]), w["block.1"]["q8"])
+
+
+def test_drop_cache_entry_compacts(tmp_path):
+    w = _model_weights()
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, w, order=list(w))
+    base = p.stat().st_size
+    set_cache_entry(p, "block.0", "kA",
+                    {"w": np.ones((64, 64), np.float32)})
+    assert p.stat().st_size > base
+    assert drop_cache_entry(p, "block.0", "kA") is True
+    assert drop_cache_entry(p, "block.0", "kA") is False
+    assert p.stat().st_size == base  # rewrite compacted the dead segment
+    with SuperBundle(p) as sb:
+        assert not sb.has_cached("block.0", "kA")
+
+
+def test_header_slack_allows_inplace_metadata_change(tmp_path):
+    """Shrinking a cache entry (different nbytes digits) must still commit
+    in place thanks to the header slack."""
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, {"l": {"w": np.zeros(4, np.float32)}}, order=["l"])
+    set_cache_entry(p, "l", "k", {"w": np.zeros(1000, np.float32)})
+    assert set_cache_entry(p, "l", "k",
+                           {"w": np.arange(9, dtype=np.float32)}) == "inplace"
+    with SuperBundle(p) as sb:
+        got = sb.read_cached("l", "k")["w"]
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.arange(9, dtype=np.float32))
+    assert HEADER_SLACK >= 64
+
+
+def test_migrate_per_layer_bundles(tmp_path):
+    w = _model_weights()
+    src = LayerStore(tmp_path / "perlayer", fmt="bundle")
+    for layer, tensors in w.items():
+        src.write_raw(layer, tensors)
+    src.write_cached("block.0", "kA", {"t": np.ones(7, np.float32)})
+    dest = migrate(tmp_path / "perlayer", tmp_path / "m.superbundle",
+                   order=["block.0", "block.1", "empty"])
+    with SuperBundle(dest) as sb:
+        for layer in ("block.0", "block.1"):
+            got = sb.read_raw(layer)
+            for k, v in w[layer].items():
+                assert got[k].dtype == v.dtype
+                np.testing.assert_array_equal(np.asarray(got[k]),
+                                              np.asarray(v))
+        assert sb.has_cached("block.0", "kA")
+        np.testing.assert_array_equal(
+            np.asarray(sb.read_cached("block.0", "kA")["t"]),
+            np.ones(7, np.float32))
+
+
+def test_layerstore_super_matches_bundle(tmp_path):
+    """fmt="super" reads == fmt="bundle" reads on a cnn_zoo model."""
+    from repro.models.cnn import build_cnn
+
+    layers, _ = build_cnn("mobilenet", image=24, width=0.35)
+    s_sup = LayerStore(tmp_path / "super", fmt="super")
+    s_bun = LayerStore(tmp_path / "bundle", fmt="bundle")
+    for l in layers:
+        if not l.weights:
+            continue
+        s_sup.write_raw(l.spec.name, l.weights)
+        s_bun.write_raw(l.spec.name, l.weights)
+    for l in layers:
+        if not l.weights:
+            continue
+        for mmap in (False, True):
+            a = s_sup.read_raw(l.spec.name, mmap=mmap)
+            b = s_bun.read_raw(l.spec.name, mmap=mmap)
+            assert set(a) == set(b)
+            for k in a:
+                assert a[k].dtype == b[k].dtype
+                np.testing.assert_array_equal(np.asarray(a[k]),
+                                              np.asarray(b[k]))
+    # weightless layers read back as {} in both formats
+    assert s_sup.read_raw("stateless_layer") == {}
+    assert s_bun.read_raw("stateless_layer") == {}
+
+
+def test_layerstore_super_one_open_per_model(tmp_path):
+    w = _model_weights()
+    st = LayerStore(tmp_path, fmt="super")
+    for layer, tensors in w.items():
+        st.write_raw(layer, tensors)
+    st.read_raw("block.0")  # flush + first open
+    st.close()
+    st.open_count = 0
+    for layer in w:
+        st.read_raw(layer)
+    assert st.open_count == 1
+    # views are immutable (zero-copy into the shared read-only mmap)
+    v = st.read_raw("block.0")["w"]
+    assert not v.flags.writeable
+    with pytest.raises(ValueError):
+        v[0, 0] = 1.0
+
+
+def test_layerstore_super_cache_roundtrip_and_drop(tmp_path):
+    import ml_dtypes
+
+    st = LayerStore(tmp_path, fmt="super")
+    st.write_raw("l0", {"w": np.ones((8, 8), np.float32)})
+    wc = {"w": np.ones((8, 8), np.float32).astype(ml_dtypes.bfloat16)}
+    st.write_cached("l0", "bf16_cast", wc)
+    assert st.has_cached("l0", "bf16_cast")
+    back = st.read_cached("l0", "bf16_cast")
+    assert back["w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(wc["w"]))
+    assert st.cache_bytes() > 0
+    st.drop_cached("l0", "bf16_cast")
+    assert not st.has_cached("l0", "bf16_cast")
+    assert st.cache_bytes() == 0
+    assert st.model_bytes() > 0
+    assert st.raw_bytes("l0") == 8 * 8 * 4
+
+
+def test_layerstore_super_batches_cache_materialization(tmp_path, monkeypatch):
+    """A decide()-style loop materializing caches for many layers must
+    coalesce into ONE container rewrite at the next flush point, not one
+    rewrite per layer."""
+    import repro.checkpoint.io as io_mod
+
+    st = LayerStore(tmp_path, fmt="super")
+    for layer, tensors in _model_weights().items():
+        st.write_raw(layer, tensors)
+    st.read_raw("block.0")  # install flush
+
+    calls = []
+    real = io_mod.write_superbundle
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(io_mod, "write_superbundle", counting)
+    st.write_cached("block.0", "k", {"t": np.ones(3, np.float32)})
+    st.write_cached("block.1", "k", {"t": np.full(4, 2.0, np.float32)})
+    st.drop_cached("block.1", "k")
+    # buffered entries are served (and dropped) without flushing
+    np.testing.assert_array_equal(
+        np.asarray(st.read_cached("block.0", "k")["t"]),
+        np.ones(3, np.float32))
+    assert st.read_cached("block.1", "k") == {}
+    assert not st.has_cached("block.1", "k")
+    assert calls == []
+    assert st.cache_bytes() > 0  # flush point
+    assert len(calls) == 1
+    assert st.has_cached("block.0", "k")
+    # model + cache accounting sums to the real on-disk file size
+    assert (st.model_bytes() + st.cache_bytes()
+            == (tmp_path / "model.superbundle").stat().st_size)
+
+
+def test_layerstore_super_readahead(tmp_path):
+    w = _model_weights()
+    st = LayerStore(tmp_path, fmt="super")
+    for layer, tensors in w.items():
+        st.write_raw(layer, tensors)
+    # hints for present, empty, and unknown layers must all be safe
+    hinted = st.readahead(["block.0", "block.1", "empty", "nope"])
+    assert 0 <= hinted <= 2
+    assert LayerStore(tmp_path / "b", fmt="bundle").readahead(["x"]) == 0
+
+
+def test_cold_engine_on_super_store(tmp_path):
+    """Full decide() + run_cold() through a super-bundle store matches the
+    per-layer bundle store's output."""
+    from repro.core.engine import ColdEngine
+    from repro.models.cnn import build_cnn
+
+    layers, x = build_cnn("mobilenet", image=16, width=0.25)
+    eng_b = ColdEngine(layers, tmp_path / "bundle", store_fmt="bundle")
+    eng_b.decide(x, n_little=2)
+    out_b = np.asarray(eng_b.run_cold(x).output)
+
+    eng_s = ColdEngine(layers, tmp_path / "super", store_fmt="super")
+    stats = eng_s.decide(x, n_little=2)
+    res = eng_s.run_cold(x)
+    np.testing.assert_allclose(np.asarray(res.output), out_b,
+                               rtol=2e-4, atol=2e-5)
+    assert (tmp_path / "super" / "model.superbundle").exists()
+    assert stats["model_bytes"] > 0
+    # the sequential baseline works against the same single-file store
+    out_seq = np.asarray(eng_s.run_cold(x, mode="sequential").output)
+    np.testing.assert_allclose(out_seq, out_b, rtol=2e-4, atol=2e-5)
