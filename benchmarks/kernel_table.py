@@ -28,20 +28,26 @@ def run(print_csv=True, cin=64, cout=192, hw=32):
     with tempfile.TemporaryDirectory() as d:
         store = LayerStore(d)
         store.write_raw(spec.name, raw)
-        prof = Profiler(store)
-        for kern in registry_for("conv2d"):
-            if not kern.supports(spec):
-                continue
-            p = prof.profile(spec, kern, x)
-            rows.append(p)
-            if print_csv:
-                print(csv_line(f"kernel_table/{kern.name}/read_raw", p.read_raw_s))
-                print(csv_line(f"kernel_table/{kern.name}/transform", p.transform_s))
-                print(csv_line(f"kernel_table/{kern.name}/read_cache", p.read_cached_s))
-                print(csv_line(f"kernel_table/{kern.name}/stage", p.stage_s))
-                print(csv_line(
-                    f"kernel_table/{kern.name}/execute", p.exec_s,
-                    f"cached_bytes={p.transformed_bytes};raw_bytes={p.raw_bytes}"))
+        with Profiler(store) as prof:
+            rows = _profile_all(prof, spec, x, print_csv)
+    return rows
+
+
+def _profile_all(prof, spec, x, print_csv):
+    rows = []
+    for kern in registry_for("conv2d"):
+        if not kern.supports(spec):
+            continue
+        p = prof.profile(spec, kern, x)
+        rows.append(p)
+        if print_csv:
+            print(csv_line(f"kernel_table/{kern.name}/read_raw", p.read_raw_s))
+            print(csv_line(f"kernel_table/{kern.name}/transform", p.transform_s))
+            print(csv_line(f"kernel_table/{kern.name}/read_cache", p.read_cached_s))
+            print(csv_line(f"kernel_table/{kern.name}/stage", p.stage_s))
+            print(csv_line(
+                f"kernel_table/{kern.name}/execute", p.exec_s,
+                f"cached_bytes={p.transformed_bytes};raw_bytes={p.raw_bytes}"))
     return rows
 
 

@@ -1,10 +1,32 @@
 """Table 4 analogue: offline scheduling-plan generation time + disk storage
-overhead of the post-transformed weight cache, per model."""
+overhead of the post-transformed weight cache, per model — plus the LLM arm
+gating shape-class sharing:
+
+  * per-layer path (sharing off, no profile DB) vs shared cold decide vs a
+    second decide against the warm shape-class profile DB;
+  * asserts (``--smoke``, run in CI): shared-vs-per-layer plan equivalence
+    on deterministic profiles; ≤ one profile per (shape-class × kernel) and
+    ≤ one XLA compile per (chosen kernel × shape-class); zero profile calls
+    and ≥ 10× decide speedup with a warm DB; ≥ 3× cold-decide speedup vs the
+    per-layer path; profiling writes NO candidate cache entries into the
+    model store.
+"""
 from __future__ import annotations
 
-from benchmarks.common import build_engine, csv_line
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+try:
+    from benchmarks.common import build_engine, csv_line
+except ModuleNotFoundError:  # invoked as `python benchmarks/plan_generation.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import build_engine, csv_line
 
 MODELS = ["mobilenet", "squeezenet", "resnet18", "alexnet"]
+
+LLM_BLOCKS = 8
 
 
 def run(print_csv=True):
@@ -26,5 +48,114 @@ def run(print_csv=True):
     return rows
 
 
+def _decide(graph, toks, store, **engine_kw):
+    from repro.core.engine import ColdEngine
+
+    t0 = time.perf_counter()
+    eng = ColdEngine(graph, store, **engine_kw)
+    stats = eng.decide(toks, n_little=2, calibrate_interference=False)
+    return eng, stats, time.perf_counter() - t0
+
+
+def plan_equivalence(num_layers=LLM_BLOCKS):
+    """Shared-profile vs per-layer plans on DETERMINISTIC profiles: with
+    bit-identical numbers for equivalent layers, choices, queues, and
+    makespan must coincide exactly."""
+    from repro.core.llm_graph import tiny_llm_graph
+    from repro.core.profiler import SyntheticProfiler
+
+    graph, toks = tiny_llm_graph(num_layers)
+    plans = []
+    for share in (True, False):
+        with tempfile.TemporaryDirectory() as d:
+            from repro.core.engine import ColdEngine
+
+            eng = ColdEngine(graph, d, share_shape_classes=share,
+                             profile_db=None, shader_cache=False)
+            eng.profiler_factory = SyntheticProfiler
+            eng.decide(toks, n_little=2, calibrate_interference=False)
+            plans.append(eng.plan)
+    shared, per_layer = plans
+    same_choices = shared.choices == per_layer.choices
+    same_queues = (shared.big_prep == per_layer.big_prep
+                   and shared.little_queues == per_layer.little_queues)
+    dmk = abs(shared.est_makespan - per_layer.est_makespan)
+    return same_choices, same_queues, dmk
+
+
+def run_llm(print_csv=True, smoke=False, num_layers=LLM_BLOCKS):
+    from repro.core.llm_graph import tiny_llm_graph
+
+    graph, toks = tiny_llm_graph(num_layers)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        # arm 1: legacy per-layer path — every layer profiled, no DB
+        eng_pl, s_pl, t_pl = _decide(
+            graph, toks, d1, share_shape_classes=False, profile_db=None)
+        # arm 2: shared cold decide — one representative per shape class,
+        # DB starts empty
+        eng_sh, s_sh, t_sh = _decide(graph, toks, d2)
+        # arm 3: second decide on the same store — warm profile DB
+        eng_w, s_w, t_w = _decide(graph, toks, d2)
+
+        # sharing invariants
+        classes = {}
+        for l in eng_sh.layers:
+            classes.setdefault(eng_sh._sc_by_layer[l.spec.name], l)
+        max_profiles = sum(len(eng_sh._kernels_for(l.spec))
+                           for l in classes.values())
+        assert s_sh["shape_classes"] < len(graph), \
+            "identical blocks must collapse into one shape class"
+        assert s_sh["profile_calls"] <= max_profiles, \
+            (s_sh["profile_calls"], max_profiles)
+        assert s_w["profile_calls"] == 0, s_w
+        # profiling writes no candidate entries into the model store: only
+        # the chosen cache materializations touch it
+        chosen_cached = sum(c.use_cache for c in eng_sh.plan.choices)
+        assert eng_sh.store.cache_write_count == chosen_cached, \
+            (eng_sh.store.cache_write_count, chosen_cached)
+        # one XLA compile per (shape-class × chosen kernel)
+        eng_sh._jitted_map(eng_sh.plan.choices, toks)
+        chosen_pairs = {(eng_sh._sc_by_layer[l.spec.name], c.kernel)
+                        for l, c in zip(eng_sh.layers, eng_sh.plan.choices)}
+        misses = eng_sh.compile_cache.stats["misses"]
+        assert misses <= len(chosen_pairs), (misses, chosen_pairs)
+
+        same_choices, same_queues, dmk = plan_equivalence(num_layers)
+        if smoke:
+            assert same_choices and same_queues, \
+                "shared vs per-layer plans diverged on deterministic profiles"
+            assert dmk <= 1e-9, dmk
+            assert t_pl / t_sh >= 3.0, \
+                f"cold shared decide only {t_pl/t_sh:.1f}x vs per-layer"
+            assert t_pl / t_w >= 10.0, \
+                f"warm-DB decide only {t_pl/t_w:.1f}x vs per-layer cold"
+
+    if print_csv:
+        print(csv_line("plan_generation/llm_per_layer", t_pl,
+                       f"profiles={s_pl['profile_calls']}"))
+        print(csv_line(
+            "plan_generation/llm_shared_cold", t_sh,
+            f"profiles={s_sh['profile_calls']};"
+            f"classes={s_sh['shape_classes']};"
+            f"compiles={misses};speedup={t_pl/t_sh:.1f}x"))
+        print(csv_line(
+            "plan_generation/llm_warm_db", t_w,
+            f"profiles=0;db_hits={s_w['profile_db_hits']};"
+            f"speedup={t_pl/t_w:.1f}x"))
+        print(csv_line(
+            "plan_generation/llm_plan_equivalence", dmk,
+            f"choices_equal={same_choices};queues_equal={same_queues}"))
+    return {
+        "per_layer_s": t_pl, "shared_cold_s": t_sh, "warm_db_s": t_w,
+        "profile_calls": (s_pl["profile_calls"], s_sh["profile_calls"],
+                          s_w["profile_calls"]),
+        "plan_equal": same_choices and same_queues,
+    }
+
+
 if __name__ == "__main__":
-    run()
+    smoke = "--smoke" in sys.argv
+    run_llm(smoke=smoke)
+    if not smoke:
+        run()

@@ -91,6 +91,7 @@ class LayerStore:
         self.fmt = fmt
         self.mmap = mmap
         self.open_count = 0  # file opens performed by reads
+        self.cache_write_count = 0  # write_cached calls (cache materializations)
         (self.root / "raw").mkdir(parents=True, exist_ok=True)
         (self.root / "cache").mkdir(parents=True, exist_ok=True)
         if fmt == "super":
@@ -235,6 +236,7 @@ class LayerStore:
 
     # -- post-transformed cache (§3.1.2) ------------------------------------
     def write_cached(self, layer: str, kernel: str, weights: Dict[str, np.ndarray]):
+        self.cache_write_count += 1
         if self.fmt == "super":
             self._pending_drop.discard((layer, kernel))
             if (not self._super_dirty() and self._super_path.exists()

@@ -6,9 +6,20 @@ pair costs a lower+compile on first use. We cache serialized compiled
 executables on disk via ``jax.experimental.serialize_executable`` and restore
 them on cold start, turning the compile stage into a (much cheaper) disk
 read — exactly the shader-cache trade.
+
+Keys are (kernel, *shape-class*, example shapes, jax/jaxlib version):
+
+  * shape-class instead of layer name — the L byte-identical decoder blocks
+    of an LLM graph share ONE compiled executable instead of compiling L
+    times (``registry.shape_class_key``);
+  * the jax/jaxlib version folded into the key makes entries from another
+    runtime miss cleanly instead of relying on a deserialize exception;
+  * examples may be real arrays or ``jax.ShapeDtypeStruct`` avatars — the
+    cache only lowers, so no weight bytes are needed to compile.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import pickle
 import time
@@ -18,9 +29,22 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 
-def _key(kernel_name: str, spec_name: str, shapes: Tuple) -> str:
-    h = hashlib.sha1(repr((kernel_name, spec_name, shapes)).encode()).hexdigest()
-    return h[:24]
+@functools.lru_cache(maxsize=1)
+def _version_tag() -> str:
+    """jax/jaxlib versions — constant per process, probed once. Also feeds
+    ``profiler.host_fingerprint``."""
+    try:
+        import jaxlib
+
+        jl = getattr(jaxlib, "__version__", "?")
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        jl = "?"
+    return f"{jax.__version__}/{jl}"
+
+
+def _key(kernel_name: str, ident: str, shapes: Tuple, version: str) -> str:
+    h = hashlib.sha1(repr((kernel_name, ident, shapes, version)).encode())
+    return h.hexdigest()[:24]
 
 
 class CompileCache:
@@ -32,17 +56,21 @@ class CompileCache:
         self.stats = {"hits": 0, "misses": 0, "disk_hits": 0,
                       "compile_s": 0.0, "deserialize_s": 0.0}
 
-    def get(self, kernel_name: str, spec, fn: Callable, w_example, x_example):
-        """Returns a compiled callable for fn(w, x)."""
+    def get(self, kernel_name: str, spec, fn: Callable, w_example, x_example,
+            *, shape_class: Optional[str] = None):
+        """Returns a compiled callable for fn(w, x). ``shape_class`` is the
+        sharing identity — all layers of one class get the same executable;
+        without it the cache degrades to per-spec keying."""
         shapes = (
-            tuple(sorted((k, v.shape, str(v.dtype)) for k, v in w_example.items())),
-            (x_example.shape, str(x_example.dtype)),
+            tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                         for k, v in w_example.items())),
+            (tuple(x_example.shape), str(x_example.dtype)),
         )
-        key = _key(kernel_name, spec.name, shapes)
+        ident = shape_class if shape_class is not None else spec.name
+        key = _key(kernel_name, ident, shapes, _version_tag())
         if key in self.mem:
             self.stats["hits"] += 1
             return self.mem[key]
-        jitted = jax.jit(fn)
         path = self.root / f"{key}.xla" if self.root else None
         if path and path.exists():
             try:
@@ -58,8 +86,9 @@ class CompileCache:
                 return compiled
             except Exception:
                 pass  # stale/incompatible cache entry: recompile below
+        # jax.jit is only built on a genuine miss — on hits it was dead work
         t0 = time.perf_counter()
-        lowered = jitted.lower(w_example, x_example)
+        lowered = jax.jit(fn).lower(w_example, x_example)
         compiled = lowered.compile()
         self.stats["compile_s"] += time.perf_counter() - t0
         self.stats["misses"] += 1

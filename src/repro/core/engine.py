@@ -2,13 +2,21 @@
 online cold-inference runtime.
 
 Offline ``decide()`` (runs once when a model lands on the device):
-  1. profile every (layer × kernel) read/transform/execute (+compile);
-  2. build per-layer candidate lists (kernel × {raw, cached}) and
-     Pareto-filter them (Algorithm 1 line 1);
-  3. run the kernel scheduler (Algorithm 1) to get the plan;
+  1. partition layers into *shape classes* (``registry.shape_class_key``) and
+     profile ONE representative per (shape-class × kernel) — consulting the
+     persistent shape-class ``ProfileDB`` first, so a second ``decide()`` or
+     a sibling model with equivalent layers skips profiling entirely;
+  2. fan the profiles out to every equivalent layer, build per-layer
+     candidate lists (kernel × {raw, cached}) and Pareto-filter them once
+     per shape class (Algorithm 1 line 1);
+  3. run the kernel scheduler (Algorithm 1, memoized/incremental) to get
+     the plan;
   4. materialize the post-transformed weight cache for chosen cached layers
      (and drop unused cache entries — storage accounting);
-  5. optionally pre-serialize compiled executables (the shader cache).
+  5. optionally pre-serialize compiled executables (the shader cache),
+     shared per (kernel × shape-class): L identical decoder blocks cost one
+     lower+compile, with examples built from ``jax.ShapeDtypeStruct``
+     avatars instead of reading + transforming real weights per layer.
 
 Online ``run_cold()`` executes the plan with the pipelined runtime;
 ``run_warm()`` is the steady-state path (everything resident + compiled).
@@ -17,9 +25,9 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +36,9 @@ import numpy as np
 from repro.checkpoint import LayerStore
 from repro.core.compile_cache import CompileCache
 from repro.core.pipeline import PipelineRuntime, RunResult
-from repro.core.profiler import CoreModel, OpProfile, Profiler
+from repro.core.profiler import CoreModel, OpProfile, ProfileDB, Profiler
 from repro.core.registry import (
-    Kernel, LayerSpec, StatelessKernel, registry_for,
+    Kernel, LayerSpec, StatelessKernel, registry_for, shape_class_key,
 )
 from repro.core.scheduler import (
     Choice, LayerCandidates, Plan, pareto_filter, schedule,
@@ -56,6 +64,8 @@ class ColdEngine:
         allow_lossy: bool = False,
         shader_cache: bool = True,
         store_fmt: str = "bundle",
+        share_shape_classes: bool = True,
+        profile_db: Union[str, Path, ProfileDB, None] = "auto",
     ):
         self.layers = layers
         self.specs = [l.spec for l in layers]
@@ -64,11 +74,25 @@ class ColdEngine:
         self.allow_lossy = allow_lossy
         self.compile_cache = CompileCache(
             Path(store_dir) / "xla_cache" if shader_cache else None)
+        # shape-class sharing: profile/compile one representative per class
+        # and fan out. False = the legacy per-layer path (every layer keyed
+        # uniquely) — kept for baselines and equivalence tests.
+        self.share_shape_classes = share_shape_classes
+        if profile_db == "auto":
+            self.profile_db: Optional[ProfileDB] = ProfileDB(
+                Path(store_dir) / "profile_db.json")
+        elif profile_db is None or isinstance(profile_db, ProfileDB):
+            self.profile_db = profile_db
+        else:
+            self.profile_db = ProfileDB(Path(profile_db))
+        self.profiler_factory: Callable[..., Profiler] = Profiler
         self.plan: Optional[Plan] = None
         self.profiles: Dict[str, List[OpProfile]] = {}
         self._input_example: Optional[np.ndarray] = None
         self._layer_inputs: Optional[List[np.ndarray]] = None
         self._jitted_cache: Dict[tuple, Dict[str, Callable]] = {}
+        self._sc_by_layer: Dict[str, str] = {}
+        self._transform_avatars: Dict[Tuple[str, str], Dict[str, Any]] = {}
         # persist raw weights (the on-device model files)
         for l in layers:
             if l.weights:
@@ -99,6 +123,52 @@ class ColdEngine:
         return xs
 
     # ------------------------------------------------------------------
+    def _shape_class_for(self, l: LayerDef, xin: np.ndarray) -> str:
+        """Profile/compile-sharing identity of a layer. With sharing off the
+        layer name is folded in, making every class a singleton (the legacy
+        per-layer path)."""
+        xin = np.asarray(xin)
+        key = shape_class_key(
+            l.spec,
+            input_shape=tuple(xin.shape), input_dtype=str(xin.dtype),
+            weight_dtypes={k: str(np.asarray(v).dtype)
+                           for k, v in l.weights.items()} or None,
+        )
+        if not self.share_shape_classes:
+            key = f"{key}:{l.spec.name}"
+        return key
+
+    def _options_from_profiles(
+        self, plist: List[OpProfile], spec: LayerSpec,
+    ) -> List[Tuple[Choice, float, float, float]]:
+        """Candidate (choice, prep_little, prep_big, exec) tuples from one
+        shape class's profiles, Pareto-filtered once and shared by every
+        member layer."""
+        cm = self.core_model
+        options = []
+        for p in plist:
+            for use_cache in ((False, True) if spec.weight_shapes else (False,)):
+                # big-core prep = read(+transform)+stage; reads are
+                # metadata-cheap with mmap bundles, staging carries the
+                # actual byte movement — the split the scheduler needs
+                prep_big = p.prep_s(use_cache)
+                # little-core factors per op kind (Fig. 6 affinity),
+                # reads scaled by the measured co-read interference
+                rd = cm.little_read * self.io_interference
+                stage = p.stage_s * cm.little_stage
+                if use_cache:
+                    prep_little = p.read_cached_s * rd + stage
+                else:
+                    prep_little = (p.read_raw_s * rd
+                                   + p.transform_s * cm.little_transform
+                                   + stage)
+                options.append(
+                    (Choice(p.kernel, use_cache), prep_little, prep_big,
+                     p.exec_s))
+        filtered = pareto_filter([(c, pl, ex) for c, pl, pb, ex in options])
+        keep_keys = {id(c[0]) for c in filtered}
+        return [o for o in options if id(o[0]) in keep_keys]
+
     def decide(
         self, x_example: np.ndarray, *, n_little: int = 3,
         force_reprofile: bool = False, calibrate_interference: bool = True,
@@ -107,9 +177,6 @@ class ColdEngine:
         t0 = time.perf_counter()
         self._input_example = x_example
         layer_inputs = self._layer_inputs = self._trace_shapes(x_example)
-        prof = Profiler(self.store)
-        cands: List[LayerCandidates] = []
-        cm = self.core_model
         # §3.2: co-running preps share disk bandwidth — measure the real
         # per-op slowdown with n_little concurrent readers and fold it into
         # the little-core prep costs the scheduler optimizes against.
@@ -119,38 +186,68 @@ class ColdEngine:
 
             self.io_interference = measure_read_interference(
                 self.store, [l.spec.name for l in self.layers], n_little)
-        for l, xin in zip(self.layers, layer_inputs):
-            plist: List[OpProfile] = []
-            options = []
-            for kern in self._kernels_for(l.spec):
-                p = prof.profile(l.spec, kern, xin)
-                plist.append(p)
-                for use_cache in ((False, True) if l.spec.weight_shapes else (False,)):
-                    # big-core prep = read(+transform)+stage; reads are
-                    # metadata-cheap with mmap bundles, staging carries the
-                    # actual byte movement — the split the scheduler needs
-                    prep_big = p.prep_s(use_cache)
-                    # little-core factors per op kind (Fig. 6 affinity),
-                    # reads scaled by the measured co-read interference
-                    rd = cm.little_read * self.io_interference
-                    stage = p.stage_s * cm.little_stage
-                    if use_cache:
-                        prep_little = p.read_cached_s * rd + stage
-                    else:
-                        prep_little = (p.read_raw_s * rd
-                                       + p.transform_s * cm.little_transform
-                                       + stage)
-                    options.append(
-                        (Choice(kern.name, use_cache), prep_little, prep_big,
-                         p.exec_s))
-            self.profiles[l.spec.name] = plist
-            filtered = pareto_filter([(c, pl, ex) for c, pl, pb, ex in options])
-            keep_keys = {id(c[0]) for c in filtered}
-            options = [o for o in options if id(o[0]) in keep_keys]
-            cands.append(LayerCandidates(layer=l.spec.name, options=options))
+
+        # partition into shape classes; profile one representative per
+        # (class × kernel), consulting the persistent profile DB first
+        self._sc_by_layer = {}
+        groups: Dict[str, List[int]] = {}
+        for i, (l, xin) in enumerate(zip(self.layers, layer_inputs)):
+            sc = self._shape_class_for(l, xin)
+            self._sc_by_layer[l.spec.name] = sc
+            groups.setdefault(sc, []).append(i)
+
+        db = self.profile_db
+        db_hits = 0
+        prof = self.profiler_factory(self.store)
+        sc_profiles: Dict[str, List[OpProfile]] = {}
+        try:
+            for sc, idxs in groups.items():
+                rep, xin = self.layers[idxs[0]], layer_inputs[idxs[0]]
+                plist: List[OpProfile] = []
+                for kern in self._kernels_for(rep.spec):
+                    p = None
+                    if db is not None and not force_reprofile:
+                        p = db.get(sc, kern.name)
+                        if p is not None:
+                            db_hits += 1
+                    if p is None:
+                        p = prof.profile(rep.spec, kern, xin)
+                        if db is not None:
+                            db.put(sc, kern.name, p)
+                    plist.append(p)
+                    if p.transformed_avatars is not None:
+                        self._transform_avatars[(sc, kern.name)] = \
+                            p.transformed_avatars
+                sc_profiles[sc] = plist
+        finally:
+            prof.close()
+        if db is not None:
+            db.save()
+        profile_calls = prof.calls
+
+        # fan profiles out to every member layer; candidate sweeps (incl.
+        # the Pareto filter) collapse to one per shape class
+        self.profiles = {}
+        cands: List[Optional[LayerCandidates]] = [None] * len(self.layers)
+        for sc, idxs in groups.items():
+            plist = sc_profiles[sc]
+            options = self._options_from_profiles(
+                plist, self.layers[idxs[0]].spec)
+            for i in idxs:
+                name = self.layers[i].spec.name
+                self.profiles[name] = [replace(p, layer=name) for p in plist]
+                cands[i] = LayerCandidates(layer=name, options=options)
 
         self.plan = schedule(cands, n_little)
-        # materialize/drop the weight cache per the plan
+        # materialize/drop the weight cache per the plan; entries already
+        # materialized by a previous decide() from the SAME raw weights
+        # (fingerprint sidecar) are kept as-is, so a warm-DB decide performs
+        # zero transforms — but an updated checkpoint invalidates them
+        fp_path = self.store.root / "cache_fingerprints.json"
+        try:
+            fps: Dict[str, Dict[str, str]] = json.loads(fp_path.read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            fps = {}
         for l, choice in zip(self.layers, self.plan.choices):
             if not l.spec.weight_shapes:
                 continue
@@ -158,10 +255,19 @@ class ColdEngine:
             for k2 in self._kernels_for(l.spec):
                 if k2.name != kern.name or not choice.use_cache:
                     self.store.drop_cached(l.spec.name, k2.name)
-            if choice.use_cache:
+            if not choice.use_cache:
+                fps.pop(l.spec.name, None)
+                continue
+            fp = self._raw_fingerprint(l)
+            fresh = (not force_reprofile and fp != ""
+                     and self.store.has_cached(l.spec.name, kern.name)
+                     and fps.get(l.spec.name, {}).get(kern.name) == fp)
+            if not fresh:
                 raw = self.store.read_raw(l.spec.name)
                 self.store.write_cached(l.spec.name, kern.name,
                                         kern.transform(raw, l.spec))
+            fps[l.spec.name] = {kern.name: fp}
+        fp_path.write_text(json.dumps(fps, indent=1))
         gen_s = time.perf_counter() - t0
         # read-vs-stage split of the chosen plan's big-core prep costs
         split = {"read_s": 0.0, "transform_s": 0.0, "stage_s": 0.0}
@@ -181,6 +287,9 @@ class ColdEngine:
             "cache_bytes": self.store.cache_bytes(),
             "model_bytes": self.store.model_bytes(),
             "prep_split": split,
+            "shape_classes": len(groups),
+            "profile_calls": profile_calls,
+            "profile_db_hits": db_hits,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
                         for l, c in zip(self.layers, self.plan.choices)},
         }
@@ -191,10 +300,37 @@ class ColdEngine:
     def _kernel_by_name(self, spec: LayerSpec, name: str) -> Kernel:
         return next(k for k in self._kernels_for(spec) if k.name == name)
 
+    def _raw_fingerprint(self, l: LayerDef) -> str:
+        """Content hash of a layer's raw weights — guards cached transformed
+        entries against checkpoint updates (a stale entry would silently
+        change outputs)."""
+        import hashlib
+
+        if not l.weights:
+            return ""  # content unknown: never matches -> always rewrite
+        h = hashlib.sha1()
+        for k in sorted(l.weights):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(l.weights[k]).tobytes())
+        return h.hexdigest()[:20]
+
     # ------------------------------------------------------------------
+    def _avatar_dtype(self, name: str):
+        try:
+            return np.dtype(name)
+        except TypeError:
+            import ml_dtypes
+
+            return np.dtype(getattr(ml_dtypes, name))
+
     def _jitted_map(self, choices: List[Choice], x_example) -> Dict[str, Callable]:
-        """Compiled executables per layer (through the shader cache);
-        memoized per kernel-choice tuple."""
+        """Compiled executables per layer (through the shader cache, keyed
+        by shape class — equivalent layers share one executable); memoized
+        per kernel-choice tuple. Compile examples are ``ShapeDtypeStruct``
+        avatars: no layer's real weights are read or transformed here. The
+        transformed shapes come from profiling (or the profile DB); a layer
+        whose profiles never ran falls back to one real transform per
+        (shape-class, kernel)."""
         key = tuple(c.kernel for c in choices)
         if key in self._jitted_cache:
             return self._jitted_cache[key]
@@ -204,15 +340,28 @@ class ColdEngine:
         layer_inputs = self._layer_inputs
         for l, ch, xin in zip(self.layers, choices, layer_inputs):
             kern = self._kernel_by_name(l.spec, ch.kernel)
+            sc = self._sc_by_layer.get(l.spec.name)
+            if sc is None:
+                sc = self._sc_by_layer[l.spec.name] = \
+                    self._shape_class_for(l, xin)
             if l.spec.weight_shapes:
-                raw = self.store.read_raw(l.spec.name)
-                w_ex = {k: jnp.asarray(v)
-                        for k, v in kern.transform(raw, l.spec).items()}
+                avatars = self._transform_avatars.get((sc, kern.name))
+                if avatars is None:
+                    from repro.core.profiler import avatars_of
+
+                    raw = self.store.read_raw(l.spec.name)
+                    avatars = avatars_of(kern.transform(raw, l.spec))
+                    self._transform_avatars[(sc, kern.name)] = avatars
+                w_ex = {k2: jax.ShapeDtypeStruct(
+                            tuple(shape), self._avatar_dtype(dt))
+                        for k2, (shape, dt) in avatars.items()}
             else:
                 w_ex = {}
+            xin = np.asarray(xin)
+            x_ex = jax.ShapeDtypeStruct(tuple(xin.shape), xin.dtype)
             fn = (lambda kern, spec: lambda w, x: kern.execute(w, x, spec))(kern, l.spec)
             compiled = self.compile_cache.get(kern.name, l.spec, fn, w_ex,
-                                              jnp.asarray(xin))
+                                              x_ex, shape_class=sc)
             jitted[l.spec.name] = compiled
         self._jitted_cache[key] = jitted
         return jitted

@@ -163,3 +163,19 @@ def build_llm_graph(cfg: ArchConfig, params) -> Tuple[List[LayerDef], np.ndarray
     rng = np.random.default_rng(0)
     x = rng.integers(0, cfg.vocab_size, size=(1, 64)).astype(np.int32)
     return defs, x
+
+
+def tiny_llm_graph(num_layers: int = 8, *, seed: int = 0
+                   ) -> Tuple[List[LayerDef], np.ndarray]:
+    """A small dense graph with ``num_layers`` byte-identical decoder blocks
+    — the canonical shape-class workload for tests and the
+    ``plan_generation`` benchmark: all tblocks fall into ONE shape class, so
+    ``decide()`` should profile/compile each kernel once, not L times."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("smollm-360m").reduced(
+        num_layers=num_layers, d_model=128, d_ff=256, num_heads=2,
+        num_kv_heads=1, head_dim=64, vocab_size=512)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    return build_llm_graph(cfg, params)

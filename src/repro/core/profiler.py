@@ -14,15 +14,23 @@ numbers separately. This container has one CPU core, so:
     execution, 2× at reads, 3.8× at transforms than a little core) — used by
     the deterministic scheduler simulation (sim mode).
 
-Profiles are cached to JSON next to the model store.
+Profiles are cached to JSON next to the model store, and — keyed by shape
+class rather than layer name — in a persistent ``ProfileDB`` so a second
+``decide()`` (or a sibling model sharing the DB file) skips profiling
+entirely.
 """
 from __future__ import annotations
 
+import hashlib
 import json
+import os
+import platform
+import shutil
+import tempfile
 import time
-from dataclasses import dataclass, field, asdict
+from dataclasses import dataclass, field, asdict, replace
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -69,6 +77,10 @@ class OpProfile:
     # host->device transfer of the transformed weights (the pipeline's new
     # 'stage' op). Defaults to 0 so pre-split profile JSONs still load.
     stage_s: float = 0.0
+    # shapes/dtypes of the TRANSFORMED weights: {name: [shape, dtype_str]}.
+    # Lets the engine build jax.ShapeDtypeStruct avatars for compilation
+    # without re-reading + re-transforming real weights per layer.
+    transformed_avatars: Optional[Dict[str, Any]] = None
 
     def prep_s(self, use_cache: bool, *, include_stage: bool = True) -> float:
         """Full preparation time on a BIG core: read (+transform) + device
@@ -81,6 +93,14 @@ class OpProfile:
         return asdict(self)
 
 
+def avatars_of(weights: Dict[str, Any]) -> Dict[str, Any]:
+    """JSON-able {name: [shape, dtype_str]} description of a weight dict —
+    the transformed-weight avatars ``OpProfile`` carries and the engine
+    rehydrates into ``jax.ShapeDtypeStruct`` examples for compilation."""
+    return {k: [list(np.asarray(v).shape), str(np.asarray(v).dtype)]
+            for k, v in weights.items()}
+
+
 def _time(fn, *args, repeats: int = 3) -> float:
     best = float("inf")
     for _ in range(repeats):
@@ -91,10 +111,36 @@ def _time(fn, *args, repeats: int = 3) -> float:
 
 
 class Profiler:
+    """Measures one (layer, kernel) pair. Candidate transformed weights are
+    written to a private *scratch* directory for cached-read timing — never
+    to the model store: only ``decide()`` materializes the chosen entries
+    (with ``fmt="super"`` a store write is a container rewrite, so a
+    profiling pass that wrote every candidate would rewrite the whole model
+    file once per candidate)."""
+
     def __init__(self, store, repeats: int = 3, cold_reads: bool = True):
         self.store = store  # checkpoint.LayerStore
         self.repeats = repeats
         self.cold_reads = cold_reads
+        self._scratch: Optional[Path] = None
+        self.calls = 0
+
+    @property
+    def scratch(self) -> Path:
+        if self._scratch is None:
+            self._scratch = Path(tempfile.mkdtemp(prefix="nnv12_prof_"))
+        return self._scratch
+
+    def close(self):
+        if self._scratch is not None:
+            shutil.rmtree(self._scratch, ignore_errors=True)
+            self._scratch = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def _time_read(self, fn) -> float:
         """Disk-read timing. With cold_reads (and privilege) the OS page
@@ -123,16 +169,24 @@ class Profiler:
         def _read_raw():
             return self.store.read_raw(spec.name, mmap=False)
 
+        self.calls += 1
         raw = self.store.read_raw(spec.name)
         t_read = self._time_read(_read_raw)
         if spec.weight_shapes:
+            from repro.checkpoint.bundle import read_bundle, write_bundle
+
             t_transform = _time(lambda: kernel.transform(raw, spec), repeats=self.repeats)
             transformed = kernel.transform(raw, spec)
-            self.store.write_cached(spec.name, kernel.name, transformed)
-            t_read_cached = self._time_read(
-                lambda: self.store.read_cached(spec.name, kernel.name,
-                                               mmap=False),
-            )
+            # cached-read timing goes through a scratch bundle, NOT the
+            # model store — decide() drops the losers, and a super-bundle
+            # store would pay one container rewrite per candidate
+            scratch = self.scratch / f"{spec.name.replace('/', '_')}.{kernel.name}.bundle"
+            write_bundle(scratch, transformed)
+            try:
+                t_read_cached = self._time_read(
+                    lambda: read_bundle(scratch, mmap=False))
+            finally:
+                scratch.unlink(missing_ok=True)
             tbytes = sum(v.nbytes for v in transformed.values())
             rbytes = sum(v.nbytes for v in raw.values())
         else:
@@ -161,6 +215,7 @@ class Profiler:
             compile_s=max(t_compile_and_first - t_exec, 0.0),
             raw_bytes=rbytes, transformed_bytes=tbytes,
             stage_s=t_stage,
+            transformed_avatars=avatars_of(transformed),
         )
 
 
@@ -218,3 +273,112 @@ def load_profiles(path: Path) -> Optional[Dict[str, List[OpProfile]]]:
         return None
     raw = json.loads(path.read_text())
     return {k: [OpProfile(**d) for d in v] for k, v in raw.items()}
+
+
+class SyntheticProfiler(Profiler):
+    """Deterministic profiles derived from shapes alone — no disk reads, no
+    jit, no clocks. Costs are a pure function of (shape class, kernel), so
+    byte-identical layers get bit-identical numbers: the substrate for the
+    shared-vs-per-layer plan-equivalence gates in tests and
+    ``benchmarks/plan_generation.py``."""
+
+    GB_S = 1.0e9  # synthetic disk/compute bandwidth
+
+    def profile(self, spec: LayerSpec, kernel: Kernel, x: np.ndarray) -> OpProfile:
+        self.calls += 1
+        raw = {k: np.zeros(s, np.float32)
+               for k, s in spec.weight_shapes.items()}
+        transformed = kernel.transform(raw, spec) if spec.weight_shapes else {}
+        rbytes = sum(v.nbytes for v in raw.values())
+        tbytes = sum(np.asarray(v).nbytes for v in transformed.values())
+        # per-kernel multipliers from a stable hash — kernels trade off
+        # transform vs execute like real ones, deterministically
+        h = int(hashlib.sha1(kernel.name.encode()).hexdigest()[:8], 16)
+        t_mult = 0.5 + (h % 997) / 997.0
+        e_mult = 0.5 + ((h >> 8) % 997) / 997.0
+        xbytes = int(np.asarray(x).nbytes)
+        return OpProfile(
+            layer=spec.name, kernel=kernel.name,
+            read_raw_s=rbytes / self.GB_S + 1e-5,
+            transform_s=t_mult * tbytes / self.GB_S,
+            read_cached_s=tbytes / self.GB_S + 1e-5,
+            exec_s=e_mult * (tbytes + xbytes) / self.GB_S + 1e-6,
+            compile_s=1e-3,
+            raw_bytes=rbytes, transformed_bytes=tbytes,
+            stage_s=tbytes / (4 * self.GB_S),
+            transformed_avatars=avatars_of(transformed),
+        )
+
+
+# ---------------------------------------------------------------------------
+# persistent profile DB — shape-class keyed, host-scoped
+# ---------------------------------------------------------------------------
+def host_fingerprint() -> str:
+    """Identity of the measuring host: profiles are wall-clock measurements,
+    so entries from a different machine/CPU count/jax build must miss."""
+    from repro.core.compile_cache import _version_tag
+
+    parts = [platform.system(), platform.machine(),
+             str(os.cpu_count()), _version_tag()]
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
+
+
+class ProfileDB:
+    """Persistent (shape-class × kernel) -> OpProfile store.
+
+    Lives as one JSON file (by default next to the model store), keyed by
+    the canonical shape-class hash (``registry.shape_class_key``) + kernel
+    name, scoped by ``host_fingerprint()``. A second ``decide()`` on the
+    same model — or a first ``decide()`` on a sibling model whose layers
+    fall into already-measured shape classes — performs zero
+    ``Profiler.profile`` calls. ``force_reprofile`` bypasses reads and
+    overwrites on save."""
+
+    VERSION = 2
+
+    def __init__(self, path: Path):
+        self.path = Path(path)
+        self.host = host_fingerprint()
+        # all hosts' entries are kept side by side: a shared DB file (two
+        # machines, or two jax builds on one machine) must not clobber the
+        # other host's profiles on save
+        self._hosts: Dict[str, Dict[str, Dict[str, dict]]] = {}
+        self.entries: Dict[str, Dict[str, dict]] = {}
+        self.stats = {"hits": 0, "misses": 0}
+        self._dirty = False
+        self._load()
+
+    def _load(self):
+        if not self.path.exists():
+            return
+        try:
+            raw = json.loads(self.path.read_text())
+        except Exception:
+            return  # torn/corrupt DB: reprofile
+        if raw.get("version") != self.VERSION:
+            return  # different schema: everything misses cleanly
+        self._hosts = raw.get("hosts", {})
+        self.entries = self._hosts.get(self.host, {})
+
+    def get(self, shape_class: str, kernel: str) -> Optional[OpProfile]:
+        d = self.entries.get(shape_class, {}).get(kernel)
+        if d is None:
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return OpProfile(**d)
+
+    def put(self, shape_class: str, kernel: str, profile: OpProfile):
+        self.entries.setdefault(shape_class, {})[kernel] = asdict(profile)
+        self._dirty = True
+
+    def save(self):
+        if not self._dirty:
+            return
+        self._hosts[self.host] = self.entries
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(json.dumps({
+            "version": self.VERSION, "hosts": self._hosts}, indent=1))
+        tmp.replace(self.path)
+        self._dirty = False

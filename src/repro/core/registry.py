@@ -12,7 +12,10 @@ Kernels expose:
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
+import hashlib
+import json
 import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -50,6 +53,58 @@ class Operation:
     layer: str
     kind: OpKind
     index: int  # layer index in the chain
+
+
+# ---------------------------------------------------------------------------
+# shape classes — profile/compile equivalence between layers
+# ---------------------------------------------------------------------------
+def _canon(v: Any) -> Any:
+    """Deterministic, JSON-stable canonicalization of config values."""
+    if isinstance(v, bool) or v is None or isinstance(v, (int, float, str)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_canon(x) for x in v]
+    if isinstance(v, dict):
+        return [[str(k), _canon(v[k])] for k in sorted(v, key=str)]
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return [type(v).__name__, _canon(dataclasses.asdict(v))]
+    if isinstance(v, np.dtype):
+        return str(v)
+    return repr(v)
+
+
+def shape_class_key(
+    spec: LayerSpec,
+    *,
+    input_shape: Optional[Tuple[int, ...]] = None,
+    input_dtype: Optional[str] = None,
+    weight_dtypes: Optional[Dict[str, str]] = None,
+) -> str:
+    """Canonical shape-class identity of a layer: two layers with the same
+    key are interchangeable for profiling and compilation — same op_type,
+    same weight shapes/dtypes, same kernel-relevant config, and (when
+    given) same input avatar. Byte-identical decoder blocks of an LLM graph
+    all land in one class, so ``decide()`` profiles/compiles ONE
+    representative and fans the result out.
+
+    Stateless units wrap arbitrary Python callables whose identity the spec
+    cannot see, so they never share: their key includes the layer name.
+    """
+    if spec.op_type == "stateless":
+        payload: List[Any] = ["stateless", spec.name]
+    else:
+        payload = [
+            spec.op_type,
+            [[k, list(spec.weight_shapes[k])] for k in sorted(spec.weight_shapes)],
+            _canon(spec.config),
+        ]
+    payload.append([
+        list(input_shape) if input_shape is not None else None,
+        input_dtype,
+        _canon(weight_dtypes) if weight_dtypes else None,
+    ])
+    blob = json.dumps(payload, sort_keys=False, separators=(",", ":"))
+    return hashlib.sha1(blob.encode()).hexdigest()[:20]
 
 
 class Kernel:

@@ -193,18 +193,21 @@ def inner_schedule(
     s = 1
 
     # big-core loop (lines 6-11): while little cores are the bottleneck and
-    # the big cores can absorb another early prep, move it there.
-    def little_totals(qs):
-        return [sum(prep_little[i] for i in q) for q in qs]
-
+    # the big cores can absorb another early prep, move it there. The
+    # provisional round-robin totals are maintained incrementally — when s
+    # advances, core j's queue becomes core j+1's and the last core takes
+    # core 0's minus the promoted layer — so each step is O(M), not O(N).
+    totals = [0.0] * M_l
+    for i in range(s, N):
+        totals[(i - s) % M_l] += prep_little[i]
+    T_big = sum(prep_big[i] for i in big_prep)
     for _ in range(N):
-        # provisional little queues over remaining layers (round-robin, line 12)
-        rest = list(range(s, N))
-        qs = [rest[j::M_l] for j in range(M_l)]
-        T_little = max(little_totals(qs)) if rest else 0.0
-        T_big = sum(prep_big[i] for i in big_prep)
+        T_little = max(totals) if s < N else 0.0
         if s < N and (prep_big[s] + prep_little[s]) < (T_little - T_big):
+            head = totals[0] - prep_little[s]
+            totals = totals[1:] + [head]
             big_prep.append(s)
+            T_big += prep_big[s]
             s += 1
         else:
             break
@@ -212,9 +215,10 @@ def inner_schedule(
     rest = list(range(s, N))
     qs = [rest[j::M_l] for j in range(M_l)]
 
-    # little-core balancing loop (lines 13-20)
+    # little-core balancing loop (lines 13-20); per-core totals updated in
+    # place on each move instead of re-summed
+    totals = [sum(prep_little[i] for i in q) for q in qs]
     for _ in range(4 * N):
-        totals = little_totals(qs)
         if not rest or max(totals) - min(totals) <= eps:
             break
         jmax = max(range(M_l), key=lambda j: totals[j])
@@ -225,6 +229,8 @@ def inner_schedule(
             if prep_little[i] < gap / 2:
                 qs[jmax].remove(i)
                 qs[jmin].append(i)
+                totals[jmax] -= prep_little[i]
+                totals[jmin] += prep_little[i]
                 moved = True
                 break
         if not moved:
@@ -257,16 +263,38 @@ def _plan_for(combo: Sequence[int], layer_cands: List[LayerCandidates],
     )
 
 
+def candidate_groups(layer_cands: List[LayerCandidates]) -> List[List[int]]:
+    """Indices of layers whose candidate option values are identical —
+    shape-class equivalent layers whose profiles were shared (or measured
+    equal). Grouping is by VALUE, so per-layer-measured graphs with truly
+    identical numbers group the same way as fanned-out shared profiles."""
+    by_key: Dict[tuple, List[int]] = {}
+    for i, lc in enumerate(layer_cands):
+        key = tuple((c.kernel, c.use_cache, pl, pb, ex)
+                    for c, pl, pb, ex in lc.options)
+        by_key.setdefault(key, []).append(i)
+    return [g for g in by_key.values() if len(g) > 1]
+
+
 def schedule(
     layer_cands: List[LayerCandidates],
     M_l: int,
     *,
     exhaustive_limit: int = 4096,
+    memoize: bool = True,
 ) -> Plan:
     """Outer search. Exact enumeration when the (post-Pareto) combination
     space is small; otherwise greedy coordinate descent from the per-layer
     cold-best choice — each move re-runs the inner scheduler, mirroring the
-    paper's 'keeps calibrating through re-profiling' loop."""
+    paper's 'keeps calibrating through re-profiling' loop.
+
+    Incremental at LLM scale: inner-schedule results are memoized per combo
+    (revisited combos across descent rounds are O(1); ``memoize=False``
+    runs the identical search without the cache, for parity tests), and
+    shape-class-equivalent layers move TOGETHER first — one group move per
+    candidate option replaces |group| single-layer probes per round, which
+    is what lets hundreds of identical decoder blocks converge in a few
+    inner-schedule calls instead of thousands."""
     sizes = [len(lc.options) for lc in layer_cands]
     total = math.prod(sizes)
     if total <= exhaustive_limit:
@@ -277,22 +305,47 @@ def schedule(
                 best = p
         return best
 
+    memo: Optional[Dict[tuple, Plan]] = {} if memoize else None
+
+    def plan_for(combo: Sequence[int]) -> Plan:
+        key = tuple(combo)
+        if memo is not None:
+            p = memo.get(key)
+            if p is None:
+                memo[key] = p = _plan_for(key, layer_cands, M_l)
+            return p
+        return _plan_for(key, layer_cands, M_l)
+
     # greedy start: per-layer min(prep+exec)
     combo = [
         min(range(s), key=lambda k: lc.options[k][1] + lc.options[k][3])
         for s, lc in zip(sizes, layer_cands)
     ]
-    best = _plan_for(combo, layer_cands, M_l)
+    best = plan_for(combo)
+    groups = candidate_groups(layer_cands)
     improved = True
     while improved:
         improved = False
+        # group moves: all members of a shape-class group switch together
+        for g in groups:
+            for k in range(sizes[g[0]]):
+                if all(combo[i] == k for i in g):
+                    continue
+                trial = list(combo)
+                for i in g:
+                    trial[i] = k
+                p = plan_for(trial)
+                if p.est_makespan < best.est_makespan - 1e-9:
+                    best, combo, improved = p, trial, True
+        # single-layer refinement (position in the chain still matters:
+        # e.g. only the tail blocks may afford the cached variant)
         for li in range(len(layer_cands)):
             for k in range(sizes[li]):
                 if k == combo[li]:
                     continue
                 trial = list(combo)
                 trial[li] = k
-                p = _plan_for(trial, layer_cands, M_l)
+                p = plan_for(trial)
                 if p.est_makespan < best.est_makespan - 1e-9:
                     best, combo, improved = p, trial, True
     return best

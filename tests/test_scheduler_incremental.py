@@ -1,0 +1,104 @@
+"""Incremental outer search: memoization parity + group moves.
+
+The memoized path must be bit-identical to the unmemoized search (the memo
+is a pure cache), group moves must not hurt plan quality, and
+``brute_force_optimal`` parity on tiny graphs stays green when the descent
+path (rather than exhaustive enumeration) is forced.
+"""
+import random
+
+import pytest
+
+from repro.core.scheduler import (
+    Choice, LayerCandidates, brute_force_optimal, candidate_groups,
+    schedule,
+)
+
+
+def _mk_cands(prep_exec):
+    out = []
+    for li, opts in enumerate(prep_exec):
+        out.append(LayerCandidates(
+            layer=f"l{li}",
+            options=[(Choice(f"k{i}", False), pl, pb, ex)
+                     for i, (pl, pb, ex) in enumerate(opts)],
+        ))
+    return out
+
+
+def _random_cands(rng, n_layers, n_opts, n_groups=0):
+    """Random candidate sets; n_groups > 0 duplicates option VALUES across
+    layers, like fanned-out shape-class profiles."""
+    base = [
+        [(rng.uniform(0.1, 4), rng.uniform(0.05, 2), rng.uniform(0.05, 3))
+         for _ in range(n_opts)]
+        for _ in range(max(1, n_groups) if n_groups else n_layers)
+    ]
+    if n_groups:
+        rows = [base[i % len(base)] for i in range(n_layers)]
+    else:
+        rows = base
+    return _mk_cands(rows)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("n_groups", [0, 3])
+def test_memoized_schedule_equals_unmemoized(seed, n_groups):
+    """exhaustive_limit=1 forces the coordinate-descent path; the memo must
+    be invisible in the result."""
+    rng = random.Random(seed)
+    cands = _random_cands(rng, n_layers=10, n_opts=3, n_groups=n_groups)
+    a = schedule(cands, M_l=2, exhaustive_limit=1, memoize=True)
+    b = schedule(cands, M_l=2, exhaustive_limit=1, memoize=False)
+    assert a.est_makespan == b.est_makespan
+    assert a.choices == b.choices
+    assert a.big_prep == b.big_prep
+    assert a.little_queues == b.little_queues
+
+
+def test_candidate_groups_by_value():
+    rng = random.Random(0)
+    cands = _random_cands(rng, n_layers=9, n_opts=2, n_groups=3)
+    groups = candidate_groups(cands)
+    assert sorted(len(g) for g in groups) == [3, 3, 3]
+    # distinct-valued layers never group
+    assert candidate_groups(_random_cands(rng, 6, 2)) == []
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_descent_parity_with_exhaustive_outer_tiny(seed):
+    """Forcing the incremental descent (no exhaustive enumeration) on tiny
+    graphs with duplicated layers stays close to the exhaustive OUTER
+    search over the same inner heuristic — isolates descent quality from
+    inner_schedule placement quality. The plan can never beat the
+    exhaustive minimum (descent visits a subset of combos)."""
+    rng = random.Random(seed)
+    cands = _random_cands(rng, n_layers=5, n_opts=2, n_groups=2)
+    heur = schedule(cands, M_l=2, exhaustive_limit=1)
+    exhaustive = schedule(cands, M_l=2)  # 32 combos -> exact outer search
+    assert heur.est_makespan >= exhaustive.est_makespan - 1e-12
+    assert heur.est_makespan <= exhaustive.est_makespan * 1.15 + 1e-9
+    # and the true optimum lower-bounds both
+    opt = brute_force_optimal(cands, M_l=2)
+    assert exhaustive.est_makespan >= opt.est_makespan - 1e-12
+
+
+def test_group_moves_never_worse_than_singles_only(monkeypatch):
+    """With groups present, the search result is at least as good as the
+    old singles-only descent (group moves only ADD probes)."""
+    import repro.core.scheduler as S
+
+    rng = random.Random(7)
+    cands = _random_cands(rng, n_layers=12, n_opts=3, n_groups=4)
+    with_groups = schedule(cands, M_l=3, exhaustive_limit=1)
+    monkeypatch.setattr(S, "candidate_groups", lambda lc: [])
+    singles = schedule(cands, M_l=3, exhaustive_limit=1)
+    assert with_groups.est_makespan <= singles.est_makespan + 1e-9
+
+
+def test_exhaustive_small_space_unchanged():
+    """Small spaces still go through exact enumeration."""
+    cands = _mk_cands([[(1.0, 0.5, 0.5), (0.3, 0.2, 1.5)] for _ in range(4)])
+    p = schedule(cands, M_l=2)
+    q = schedule(cands, M_l=2, memoize=False)
+    assert p.est_makespan == q.est_makespan and p.choices == q.choices
