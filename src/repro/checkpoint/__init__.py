@@ -2,7 +2,11 @@ from repro.checkpoint.io import LayerStore, save_pytree, load_pytree  # noqa: F4
 from repro.checkpoint.bundle import (  # noqa: F401
     atomic_write, bundle_nbytes, read_bundle, read_header, write_bundle,
 )
+from repro.checkpoint.integrity import (  # noqa: F401
+    atomic_write_text, crc32c, fsync_dir, fsync_file,
+)
 from repro.checkpoint.superbundle import (  # noqa: F401
-    SuperBundle, drop_cache_entry, migrate, read_super_header,
-    set_cache_entry, write_superbundle,
+    IntegrityError, SuperBundle, compact, drop_cache_entry, journal_path,
+    migrate, read_super_header, recover_journal, set_cache_entry,
+    write_superbundle,
 )

@@ -66,16 +66,25 @@ def _pad_to(n: int, align: int = ALIGN) -> int:
     return (n + align - 1) // align * align
 
 
-def atomic_write(path: Path, write_fn) -> None:
+def atomic_write(path: Path, write_fn, *, durable: bool = False) -> None:
     """Publish a file atomically: ``write_fn(f)`` streams into ``<path>.tmp``,
     which is renamed over ``path`` only on success — readers never see a torn
-    file, and a failed write never leaves the ``.tmp`` behind."""
+    file, and a failed write never leaves the ``.tmp`` behind. With
+    ``durable`` the tmp is fsynced before the rename and the directory
+    after it, so the publish also survives power loss (the ordering the
+    super-bundle's journaled commits rely on)."""
+    from repro.checkpoint.integrity import fsync_dir, fsync_file
+
     path = Path(path)
     tmp = path.with_suffix(path.suffix + ".tmp")
     try:
         with open(tmp, "wb") as f:
             write_fn(f)
+            if durable:
+                fsync_file(f)
         tmp.replace(path)
+        if durable:
+            fsync_dir(path.parent)
     except BaseException:
         tmp.unlink(missing_ok=True)
         raise

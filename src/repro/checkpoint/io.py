@@ -20,7 +20,10 @@ Two facilities:
     atomic container rewrite at the next flush point (raw read /
     accounting / readahead), while replacing a cache entry already in the
     container goes through the super-bundle's in-place/rewrite-on-grow
-    path. ``fmt="npy"`` keeps the legacy per-tensor ``.npy`` layout (one
+    path — crash-atomic since format v3 (intent journal + per-extent
+    CRC-32C; ``verify=`` picks the checksum-audit mode and ``maintain()``
+    compacts dead cache extents — see ``checkpoint/superbundle.py`` and
+    ``docs/formats.md``). ``fmt="npy"`` keeps the legacy per-tensor ``.npy`` layout (one
     file per tensor, bf16 stored as uint16 views) for format benchmarks
     and the bundle-vs-legacy equivalence tests.
 
@@ -41,6 +44,9 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.checkpoint.bundle import read_bundle, write_bundle
+from repro.checkpoint.integrity import (  # noqa: F401  (re-exported helpers)
+    atomic_write_text, crc32c, fsync_dir, fsync_file,
+)
 from repro.checkpoint.superbundle import (
     SuperBundle, drop_cache_entry, set_cache_entry, write_superbundle,
 )
@@ -85,13 +91,19 @@ class LayerStore:
     reads default to zero-copy mmap views (``mmap=False`` forces a
     materializing read that pays the byte movement up front)."""
 
-    def __init__(self, root: Path, *, fmt: str = "bundle", mmap: bool = True):
+    def __init__(self, root: Path, *, fmt: str = "bundle", mmap: bool = True,
+                 verify: str = "lazy"):
         assert fmt in ("bundle", "npy", "super"), fmt
+        assert verify in ("never", "lazy", "eager"), verify
         self.root = Path(root)
         self.fmt = fmt
         self.mmap = mmap
+        self.verify = verify  # super-bundle checksum audit mode
         self.open_count = 0  # file opens performed by reads
         self.cache_write_count = 0  # write_cached calls (cache materializations)
+        # cache entries dropped by journal recovery / checksum verification
+        # ({"layer", "kernel", "reason"}; fmt="super" only)
+        self.dropped_entries: List[dict] = []
         (self.root / "raw").mkdir(parents=True, exist_ok=True)
         (self.root / "cache").mkdir(parents=True, exist_ok=True)
         if fmt == "super":
@@ -101,6 +113,9 @@ class LayerStore:
             self._pending_drop: Set[Tuple[str, str]] = set()
             self._order: List[str] = []  # write order == graph order
             self._reader: Optional[SuperBundle] = None
+            self._reader_seen = 0  # reader.dropped entries already harvested
+            self._maintain_thread = None
+            self._maintain_result = None
 
     # -- super-bundle plumbing ----------------------------------------------
     def _super_dirty(self) -> bool:
@@ -109,6 +124,10 @@ class LayerStore:
 
     def _invalidate_reader(self):
         if self._reader is not None:
+            # harvest entries the reader dropped AFTER open (lazy checksum
+            # audits on materializing reads) so dropped_entries stays the
+            # complete report
+            self.dropped_entries += self._reader.dropped[self._reader_seen:]
             self._reader.close()
             self._reader = None
 
@@ -118,23 +137,39 @@ class LayerStore:
         if self.fmt == "super":
             self._invalidate_reader()
 
+    def _quiesce_maintenance(self):
+        """Join a live background compaction before mutating the container —
+        two concurrent rewrites would interleave into the same tmp file. A
+        failed compaction surfaces here (or at ``maintain_wait()``)."""
+        t = getattr(self, "_maintain_thread", None)
+        if t is not None:
+            self.maintain_wait()
+
     def _super_flush(self):
         """Merge all buffered writes/drops into the container in ONE atomic
         rewrite (write_raw during model install is buffered so an N-layer
         install costs one rewrite, not N)."""
         if not self._super_dirty():
             return
+        self._quiesce_maintenance()
         raw: Dict[str, Dict[str, np.ndarray]] = {}
         cache: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
         order: List[str] = []
-        sb = (SuperBundle(self._super_path)
+        generation = 0
+        sb = (SuperBundle(self._super_path, verify=self.verify)
               if self._super_path.exists() else None)
         try:
             if sb is not None:
+                from repro.checkpoint.superbundle import _load_all
+
+                generation = sb.generation + 1
                 order = list(sb.order)
-                raw = {l: sb.read_raw(l) for l in order}
-                cache = {l: {k: sb.read_cached(l, k)
-                             for k in sb.kernels_cached(l)} for l in order}
+                # _load_all audits every extent it copies forward (unless
+                # verify="never") — the rewrite restamps fresh checksums,
+                # so unverified bytes would launder bit-rot into the new
+                # container; corrupt cache entries drop, corrupt raw raises
+                raw, cache = _load_all(sb)
+                self.dropped_entries += sb.dropped
             for l, w in self._pending_raw.items():
                 raw[l] = w
             for l in self._order:
@@ -147,7 +182,8 @@ class LayerStore:
                 raw.setdefault(l, {})
                 if l not in order:
                     order.append(l)
-            write_superbundle(self._super_path, raw, cache, order=order)
+            write_superbundle(self._super_path, raw, cache, order=order,
+                              generation=generation)
         finally:
             if sb is not None:
                 sb.close()
@@ -165,8 +201,11 @@ class LayerStore:
         if flush_all or self._pending_raw:
             self._super_flush()
         if self._reader is None and self._super_path.exists():
-            self._reader = SuperBundle(self._super_path)
+            self._reader = SuperBundle(self._super_path, verify=self.verify)
             self.open_count += 1
+            if self._reader.dropped:
+                self.dropped_entries += self._reader.dropped
+            self._reader_seen = len(self._reader.dropped)
         return self._reader
 
     def readahead(self, layers) -> int:
@@ -176,6 +215,87 @@ class LayerStore:
             return 0
         sb = self._super(flush_all=True)
         return sb.advise_willneed(list(layers)) if sb is not None else 0
+
+    def maintain(self, *, min_reclaim_bytes: int = 1,
+                 background: bool = False) -> Dict[str, Any]:
+        """Storage maintenance hook (the engine calls it after ``decide()``):
+        flush buffered writes, then compact the super-bundle if dropped/
+        superseded cache extents left at least ``min_reclaim_bytes`` dead on
+        disk. ``background=True`` runs the compaction in a daemon thread
+        (call ``maintain_wait()`` before mutating the store again). No-op
+        for non-super formats."""
+        out: Dict[str, Any] = {"compacted": False, "reclaimed_bytes": 0,
+                               "dropped": []}
+        if self.fmt != "super":
+            return out
+        self._quiesce_maintenance()  # never two compactions in flight
+        sb = self._super(flush_all=True)
+        if sb is None:
+            return out
+        reclaim = sb.reclaimable_bytes()
+        if reclaim < max(min_reclaim_bytes, 1):
+            return out
+        self._invalidate_reader()
+
+        def _run():
+            from repro.checkpoint.superbundle import compact
+
+            return compact(self._super_path)
+
+        if background:
+            import threading
+
+            self._maintain_result = None  # (stats, exception)
+
+            def _bg():
+                try:
+                    self._maintain_result = (_run(), None)
+                except BaseException as exc:  # surfaced by maintain_wait()
+                    self._maintain_result = (None, exc)
+
+            t = threading.Thread(target=_bg, name="superbundle-compact",
+                                 daemon=True)
+            t.start()
+            self._maintain_thread = t
+            # reclaimed_bytes here is the pre-compaction estimate; call
+            # maintain_wait() for the real stats (or the failure)
+            out.update(compacted=True, background=True,
+                       reclaimed_bytes=reclaim)
+            return out
+        stats = _run()
+        self.dropped_entries += stats["dropped"]
+        out.update(compacted=True, reclaimed_bytes=stats["reclaimed_bytes"],
+                   dropped=stats["dropped"])
+        return out
+
+    def warm_verify(self, layers) -> int:
+        """Materialize the given layers' raw entries now so their one-off
+        lazy CRC audit lands here instead of inside a caller's timed read
+        region. No-op (returns 0) unless ``fmt="super"`` with
+        ``verify="lazy"`` — the only configuration that audits reads."""
+        if self.fmt != "super" or self.verify != "lazy":
+            return 0
+        n = 0
+        for name in layers:
+            self.read_raw(name, mmap=False)
+            n += 1
+        return n
+
+    def maintain_wait(self) -> Optional[dict]:
+        """Join a background compaction started by ``maintain()``: returns
+        its real stats, re-raises its failure, or returns None if no
+        background compaction is pending."""
+        t = getattr(self, "_maintain_thread", None)
+        if t is None:
+            return None
+        t.join()
+        self._maintain_thread = None
+        stats, exc = self._maintain_result
+        self._maintain_result = None
+        if exc is not None:
+            raise exc
+        self.dropped_entries += stats["dropped"]
+        return stats
 
     # -- layout -------------------------------------------------------------
     def _raw_path(self, layer: str) -> Path:
@@ -238,6 +358,7 @@ class LayerStore:
     def write_cached(self, layer: str, kernel: str, weights: Dict[str, np.ndarray]):
         self.cache_write_count += 1
         if self.fmt == "super":
+            self._quiesce_maintenance()
             self._pending_drop.discard((layer, kernel))
             if (not self._super_dirty() and self._super_path.exists()
                     and self.has_cached(layer, kernel)):
@@ -287,6 +408,7 @@ class LayerStore:
 
     def drop_cached(self, layer: str, kernel: str):
         if self.fmt == "super":
+            self._quiesce_maintenance()
             self._pending_cache.pop((layer, kernel), None)
             if self._super_dirty():
                 self._pending_drop.add((layer, kernel))

@@ -1,4 +1,4 @@
-"""Model-level super-bundles — the cold path's v2 on-disk container.
+"""Model-level super-bundles — the cold path's on-disk container (format v3).
 
 PR 1's per-layer bundles turned N-tensor layer loads into one open *per
 layer*; the super-bundle turns a whole model into ONE open + ONE shared
@@ -6,18 +6,22 @@ mmap: every layer's tensors — raw weights AND the §3.1.2 post-transformed
 per-kernel cache — live in a single file, laid out in plan/graph order so
 the exec chain's cold sweep reads the file front to back.
 
-Layout (format version 2)::
+Layout (format version 3; the full byte-level specification of v1/v2/v3
+lives in ``docs/formats.md``)::
 
     [0:4)     magic  b"NNVS"
-    [4:8)     format version (uint32 LE, = 2)
+    [4:8)     format version (uint32 LE, = 3)
     [8:16)    header length in bytes (uint64 LE)
-    [16:16+H) header — UTF-8 JSON:
-              {"order":  [layer, ...],          # plan/graph order
+    [16:20)   CRC-32C of the header JSON (uint32 LE)   [v3 only]
+    [20:20+H) header — UTF-8 JSON:
+              {"generation": n,                 # bumped by every rewrite
+               "order":  [layer, ...],          # plan/graph order
                "layers": {layer: {
-                   "raw":   [{"name","dtype","shape","offset","nbytes"}],
+                   "raw":   [{"name","dtype","shape","offset","nbytes",
+                              "crc32c"}],
                    "cache": {kernel: [{same-entry-shape}, ...]}}}}
     ...       zero padding to the first 64-byte boundary; the header
-              region carries HEADER_SLACK spare bytes so small metadata
+              region carries HEADER_SLACK spare bytes so metadata
               updates can be committed in place
     segments  tensor payloads, each starting on a 64-byte boundary,
               grouped layer-after-layer in ``order`` (a layer's raw
@@ -25,7 +29,8 @@ Layout (format version 2)::
 
 Offsets are absolute from the start of the file. Dtypes are tagged by
 name; bfloat16 is stored natively and resolved through ``ml_dtypes`` on
-read, exactly as in v1 per-layer bundles.
+read. Version-2 files (no checksums, no generation, header JSON at byte
+16) still open read-only; any rewrite upgrades them to v3.
 
 Reading: ``SuperBundle`` holds the single read-only mmap; ``read_raw`` /
 ``read_cached`` return zero-copy views into it (``materialize=True``
@@ -34,31 +39,46 @@ sequential baseline's "read" op must do). ``advise_willneed`` issues
 ``madvise(MADV_WILLNEED)`` on the extents of the layers a plan will touch
 first, so the kernel readahead runs ahead of the prep pipeline.
 
-Mutation: ``set_cache_entry`` replaces a layer's post-transformed cache
-IN PLACE when the new payload fits the existing segment slots and the
-updated header fits the header region; otherwise it falls back to
-rewrite-on-grow — the whole container is regenerated through the same
-``atomic_write`` tmp+rename publish as v1 bundles, so readers never see a
-torn file. The in-place fast path is NOT crash-atomic (payload bytes are
-written first, header metadata last): a crash mid-write can tear the
-entry. It is only ever taken for the §3.1.2 cache — derived data the
-engine's decide() re-materializes from raw weights — and raw sections are
-only ever published through the atomic rewrite path; a journaled/
-checksummed in-place commit is a ROADMAP follow-up. ``drop_cache_entry``
-always rewrites, which also compacts the dead segments out. Replacing an
-entry in place invalidates views of that entry handed out earlier (they
-alias the same pages).
+Durability: in-place cache commits are CRASH-ATOMIC. Every in-place
+mutation is preceded by an append-only intent journal record
+(``<model>.sbj``, fsynced ahead of any container write) that carries the
+slot offsets/lengths/CRC-32Cs of the new payload plus the full new header
+bytes. Opening a ``SuperBundle`` replays the journal first
+(``recover_journal``): a fully-applied-but-uncommitted transaction is
+rolled forward, an untouched one rolls back to the intact old entry, and
+a genuinely torn entry is detected by checksum, dropped from the header
+(never served — the engine re-materializes it from raw weights), and
+reported in ``SuperBundle.dropped``. Raw sections are only ever published
+through the atomic tmp+rename rewrite, so raw weights always survive.
+
+Verification: the ``verify`` knob ("never" | "lazy" | "eager") controls
+checksum auditing beyond journal recovery. "lazy" (default) verifies an
+entry the first time its bytes are *materialized* — zero-copy mmap views
+are served unverified, since faulting every page in to checksum it is
+exactly the work the mmap path exists to avoid, and crash tears are
+already impossible after recovery. "eager" checksums every extent at
+open (corrupt cache entries are dropped, corrupt raw raises
+``IntegrityError``) — the fsck mode for detecting latent bit-rot.
+
+Space: ``drop_cache_entry`` now just unlinks the entry from the header
+(an in-place journaled commit), leaving a dead extent; ``compact``
+rewrites the live contents into a fresh container via the same atomic
+tmp+rename, reclaiming every dead extent (``reclaimable_bytes`` says how
+many bytes that would recover). The engine runs it as the
+``LayerStore.maintain()`` hook after ``decide()``.
 
 ``migrate`` converts a per-layer bundle ``LayerStore`` tree (``raw/
 *.bundle`` + ``cache/<kernel>/*.bundle``) into one super-bundle.
 """
 from __future__ import annotations
 
+import base64
 import json
 import mmap as mmap_mod
+import os
 import struct
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -66,14 +86,44 @@ from repro.checkpoint.bundle import (
     ALIGN, _HEADER_FIXED, _HEADER_FMT, _dtype_from_tag, _dtype_tag, _pad_to,
     atomic_write, read_bundle,
 )
+from repro.checkpoint.integrity import crc32c, fsync_file
 
 MAGIC = b"NNVS"
-VERSION = 2
+VERSION = 3
+# v3 fixed prefix: magic, version, header length, header CRC-32C
+_V3_FIXED_FMT = "<4sIQI"
+_V3_FIXED = struct.calcsize(_V3_FIXED_FMT)
 # spare header bytes so in-place cache replacement survives small metadata
-# growth (shape/nbytes digit changes) without forcing a rewrite
+# growth (shape/nbytes/crc digit changes) without forcing a rewrite
 HEADER_SLACK = 256
 
+JOURNAL_SUFFIX = ".sbj"
+_JOURNAL_MAGIC = b"SBJ1"
+# journal layout per record: magic(4) type(1) payload_len(u32) payload crc(u32)
+_JOURNAL_PREFIX = len(_JOURNAL_MAGIC) + 1 + 4
+# a clean journal above this size is truncated after the next commit
+_JOURNAL_RESET_BYTES = 256 * 1024
+
 LayerWeights = Dict[str, np.ndarray]
+
+# test hook: called at commit phases with context kwargs; a hook that raises
+# InjectedCrash simulates power loss mid-commit (nothing in this module
+# catches it, exactly like a real crash)
+_crash_hook: Optional[Callable[..., None]] = None
+
+
+class InjectedCrash(BaseException):
+    """Raised by crash-injection hooks; derives from BaseException so no
+    in-process cleanup path swallows it."""
+
+
+class IntegrityError(ValueError):
+    """A checksum-protected region failed verification."""
+
+
+def _hook(phase: str, **ctx):
+    if _crash_hook is not None:
+        _crash_hook(phase, **ctx)
 
 
 def _payload(weights: LayerWeights) -> Tuple[List[dict], List[np.ndarray]]:
@@ -83,9 +133,34 @@ def _payload(weights: LayerWeights) -> Tuple[List[dict], List[np.ndarray]]:
     for name in sorted(weights):
         a = np.ascontiguousarray(np.asarray(weights[name]))
         entries.append({"name": name, "dtype": _dtype_tag(a.dtype),
-                        "shape": list(a.shape), "nbytes": int(a.nbytes)})
+                        "shape": list(a.shape), "nbytes": int(a.nbytes),
+                        "crc32c": crc32c(a)})
         arrs.append(a)
     return entries, arrs
+
+
+def journal_path(path: Path) -> Path:
+    """The container's intent journal (``model.superbundle`` → ``model.sbj``)."""
+    path = Path(path)
+    return path.with_suffix(JOURNAL_SUFFIX)
+
+
+def _next_generation(path: Path) -> int:
+    """Generation for a rewrite of ``path``: strictly past the existing
+    container's AND past every journal record's, so no stale journal record
+    can ever be replayed against the new file — even when the old header is
+    torn and unreadable."""
+    path = Path(path)
+    gen = 0
+    try:
+        gen = int(read_super_header(path).get("generation", 0)) + 1
+    except FileNotFoundError:
+        return 0
+    except (ValueError, OSError):
+        pass  # torn/unreadable old header: fall back to the journal scan
+    return max(gen, 1 + max((p.get("gen", 0) for _t, p in
+                             _journal_records(journal_path(path))),
+                            default=-1))
 
 
 def write_superbundle(
@@ -93,11 +168,17 @@ def write_superbundle(
     raw: Dict[str, LayerWeights],
     cache: Optional[Dict[str, Dict[str, LayerWeights]]] = None,
     order: Optional[Sequence[str]] = None,
+    generation: Optional[int] = None,
 ) -> int:
-    """Write the whole model as one super-bundle (atomic tmp+rename).
+    """Write the whole model as one super-bundle (atomic tmp+rename, fsynced).
     ``order`` fixes the on-disk layer layout (plan/graph order); layers
-    not listed are appended. Returns the total file size in bytes."""
+    not listed are appended. ``generation`` stamps the container identity;
+    the default derives one strictly past the file being replaced (and its
+    journal), so stale journal records can never be replayed against the
+    new file. Returns the total file size."""
     path = Path(path)
+    if generation is None:
+        generation = _next_generation(path)
     cache = cache or {}
     order = list(order) if order is not None else list(raw)
     order += [l for l in raw if l not in order]
@@ -114,13 +195,14 @@ def write_superbundle(
             sect["cache"][kern] = ent_c
             flat += list(zip(ent_c, arrs_c))
         layers_hdr[layer] = sect
-    header = {"order": order, "layers": layers_hdr}
+    header = {"generation": int(generation), "order": order,
+              "layers": layers_hdr}
 
     # offsets depend on the header length which depends on the offsets'
     # digit count — fixed-point iterate, as in the v1 bundle writer
     for _ in range(8):
         hdr_bytes = json.dumps(header, separators=(",", ":")).encode()
-        off = _pad_to(_HEADER_FIXED + len(hdr_bytes) + HEADER_SLACK)
+        off = _pad_to(_V3_FIXED + len(hdr_bytes) + HEADER_SLACK)
         changed = False
         for e, _a in flat:
             if e.get("offset") != off:
@@ -135,51 +217,252 @@ def write_superbundle(
     total = off
 
     def _emit(f):
-        f.write(struct.pack(_HEADER_FMT, MAGIC, VERSION, len(hdr_bytes)))
+        f.write(struct.pack(_V3_FIXED_FMT, MAGIC, VERSION, len(hdr_bytes),
+                            crc32c(hdr_bytes)))
         f.write(hdr_bytes)
         for e, a in flat:
             f.write(b"\0" * (e["offset"] - f.tell()))
             f.write(a.tobytes())
         f.write(b"\0" * (total - f.tell()))
 
-    atomic_write(path, _emit)
+    atomic_write(path, _emit, durable=True)
+    # the rewrite published a complete container under a new generation:
+    # journal records targeting the old file must never be replayed
+    _journal_reset(journal_path(path))
     return total
 
 
-def _parse_super_header(buf) -> dict:
-    magic, version, hlen = struct.unpack_from(_HEADER_FMT, buf, 0)
+# ---------------------------------------------------------------------------
+# header parsing — ONE validation helper shared by every entry point
+# ---------------------------------------------------------------------------
+def _check_magic_version(magic: bytes, version: int, src) -> None:
     if magic != MAGIC:
-        raise ValueError(f"not a super-bundle (magic={magic!r})")
+        raise ValueError(f"{src}: not a super-bundle (magic={magic!r})")
     if version > VERSION:
-        raise ValueError(f"super-bundle version {version} > {VERSION}")
-    return json.loads(bytes(buf[_HEADER_FIXED:_HEADER_FIXED + hlen]).decode())
+        raise ValueError(
+            f"{src}: super-bundle format version {version} is newer than "
+            f"the supported version {VERSION}")
+
+
+def _parse_super_header(buf, src="<buffer>") -> Tuple[dict, int, int]:
+    """Validate + parse a super-bundle header out of a bytes-like buffer.
+    Returns ``(header, version, header_json_len)``; v3 headers are checksum
+    verified (a torn in-place header write raises ``IntegrityError``)."""
+    view = memoryview(buf)
+    if len(view) < _HEADER_FIXED:
+        raise ValueError(f"{src}: truncated super-bundle header")
+    magic, version, hlen = struct.unpack_from(_HEADER_FMT, view, 0)
+    _check_magic_version(magic, version, src)
+    start = _V3_FIXED if version >= 3 else _HEADER_FIXED
+    if start + hlen > len(view):
+        raise ValueError(f"{src}: truncated super-bundle header")
+    raw = bytes(view[start:start + hlen])
+    if version >= 3:
+        (hcrc,) = struct.unpack_from("<I", view, _HEADER_FIXED)
+        if crc32c(raw) != hcrc:
+            raise IntegrityError(
+                f"{src}: super-bundle header checksum mismatch")
+    return json.loads(raw.decode()), version, hlen
+
+
+def _header_from_file(f, src) -> Tuple[dict, int, bytes]:
+    """Read + parse the header from an open file via the shared validator.
+    Returns ``(header, version, raw_header_json_bytes)``."""
+    f.seek(0, os.SEEK_END)
+    size = f.tell()
+    f.seek(0)
+    pre = f.read(_V3_FIXED)
+    if len(pre) < _HEADER_FIXED:
+        raise ValueError(f"{src}: truncated super-bundle header")
+    magic, version, hlen = struct.unpack_from(_HEADER_FMT, pre, 0)
+    _check_magic_version(magic, version, src)
+    start = _V3_FIXED if version >= 3 else _HEADER_FIXED
+    if start + hlen > size:  # also guards garbage hlen in a torn v3 header
+        raise ValueError(f"{src}: truncated super-bundle header")
+    buf = pre + f.read(start + hlen - len(pre))
+    hdr, ver, _hlen = _parse_super_header(buf, src)
+    return hdr, ver, buf[start:start + hlen]
 
 
 def read_super_header(path: Path) -> dict:
+    """Parse a container's header (pure read: no journal recovery)."""
+    path = Path(path)
     with open(path, "rb") as f:
-        magic, version, hlen = struct.unpack(
-            _HEADER_FMT, f.read(_HEADER_FIXED))
-        if magic != MAGIC:
-            raise ValueError(f"{path}: not a super-bundle (magic={magic!r})")
-        if version > VERSION:
-            raise ValueError(
-                f"{path}: super-bundle version {version} > {VERSION}")
-        return json.loads(f.read(hlen).decode())
+        hdr, _version, _raw = _header_from_file(f, path)
+    return hdr
+
+
+def _write_header_inplace(f, hdr_bytes: bytes) -> None:
+    """Overwrite the header region (fixed prefix + JSON) and fsync. Only
+    called with headers known to fit ahead of the first data segment."""
+    f.seek(0)
+    f.write(struct.pack(_V3_FIXED_FMT, MAGIC, VERSION, len(hdr_bytes),
+                        crc32c(hdr_bytes)))
+    f.write(hdr_bytes)
+    fsync_file(f)
+
+
+# ---------------------------------------------------------------------------
+# intent journal — append-only, fsync-ordered ahead of in-place writes
+# ---------------------------------------------------------------------------
+def _journal_records(jp: Path) -> List[Tuple[bytes, dict]]:
+    """All valid ``(type, payload)`` records; scanning stops at the first
+    torn/garbled record (a crash mid-append only ever tears the tail)."""
+    try:
+        data = jp.read_bytes()
+    except FileNotFoundError:
+        return []
+    recs: List[Tuple[bytes, dict]] = []
+    off = 0
+    while off + _JOURNAL_PREFIX + 4 <= len(data):
+        if data[off:off + 4] != _JOURNAL_MAGIC:
+            break
+        rtype = data[off + 4:off + 5]
+        (plen,) = struct.unpack_from("<I", data, off + 5)
+        end = off + _JOURNAL_PREFIX + plen + 4
+        if rtype not in (b"B", b"C") or end > len(data):
+            break
+        (crc,) = struct.unpack_from("<I", data, off + _JOURNAL_PREFIX + plen)
+        body = data[off:off + _JOURNAL_PREFIX + plen]
+        if crc32c(body) != crc:
+            break
+        try:
+            payload = json.loads(
+                body[_JOURNAL_PREFIX:].decode())
+        except ValueError:
+            break
+        recs.append((rtype, payload))
+        off = end
+    return recs
+
+
+def _journal_append(jp: Path, rtype: bytes, payload: dict, *,
+                    sync: bool) -> None:
+    body = json.dumps(payload, separators=(",", ":")).encode()
+    rec = _JOURNAL_MAGIC + rtype + struct.pack("<I", len(body)) + body
+    rec += struct.pack("<I", crc32c(rec))
+    with open(jp, "ab") as f:
+        f.write(rec)
+        if sync:
+            fsync_file(f)
+
+
+def _journal_reset(jp: Path) -> None:
+    if jp.exists():
+        with open(jp, "r+b") as f:
+            f.truncate(0)
+            fsync_file(f)
+
+
+def _next_txn(jp: Path) -> int:
+    return 1 + max((p.get("txn", 0) for _t, p in _journal_records(jp)),
+                   default=0)
+
+
+def _extent_ok(f, e: dict) -> bool:
+    f.seek(e["offset"])
+    return crc32c(f.read(e["nbytes"])) == e["crc32c"]
+
+
+def _resolve_txn(path: Path, rec: dict) -> List[dict]:
+    """Resolve one un-committed BEGIN record against the container: roll
+    forward if the new data fully landed, keep the old entry if nothing was
+    written, otherwise drop the torn entry from the header. Returns reports
+    of dropped entries."""
+    hdr_new = base64.b64decode(rec["header"]["b64"])
+    layer, kernel = rec["layer"], rec["kernel"]
+    with open(path, "r+b") as f:
+        cur_hdr: Optional[dict] = None
+        cur_raw: Optional[bytes] = None
+        try:
+            cur_hdr, _ver, cur_raw = _header_from_file(f, path)
+        except ValueError:  # torn header (IntegrityError included)
+            pass
+        if (cur_hdr is not None
+                and int(cur_hdr.get("generation", 0)) != rec.get("gen")):
+            return []  # stale record from a superseded container: ignore
+        if all(_extent_ok(f, s) for s in rec["slots"]):
+            # data fully applied — roll forward (restore the new header if
+            # the crash tore it or hit before it was written)
+            if cur_raw != hdr_new:
+                _write_header_inplace(f, hdr_new)
+            return []
+        if cur_raw is not None and cur_raw != hdr_new:
+            # old header still current — if the old entry's bytes verify,
+            # nothing was overwritten: pure rollback, old entry survives
+            ents = (cur_hdr["layers"].get(layer, {})
+                    .get("cache", {}).get(kernel))
+            if ents is not None and all(
+                    "crc32c" in e and _extent_ok(f, e) for e in ents):
+                return []
+            base = cur_hdr
+        else:
+            # header already (or restored to) the new one; entry is torn
+            base = json.loads(hdr_new.decode())
+        base["layers"].get(layer, {}).get("cache", {}).pop(kernel, None)
+        _write_header_inplace(
+            f, json.dumps(base, separators=(",", ":")).encode())
+    return [{"layer": layer, "kernel": kernel,
+             "reason": "torn in-place commit rolled back"}]
+
+
+def recover_journal(path: Path) -> List[dict]:
+    """Replay/roll back the container's intent journal. Runs automatically
+    when a ``SuperBundle`` opens; idempotent; truncates the journal once the
+    container is consistent. Returns reports of entries that had to be
+    dropped (``[{"layer", "kernel", "reason"}, ...]``)."""
+    path = Path(path)
+    jp = journal_path(path)
+    try:
+        if jp.stat().st_size == 0:
+            return []
+    except FileNotFoundError:
+        return []
+    recs = _journal_records(jp)
+    committed = {p.get("txn") for t, p in recs if t == b"C"}
+    dropped: List[dict] = []
+    if path.exists():
+        for rtype, payload in recs:
+            if rtype == b"B" and payload.get("txn") not in committed:
+                dropped += _resolve_txn(path, payload)
+    _journal_reset(jp)
+    return dropped
 
 
 class SuperBundle:
     """ONE open + ONE shared read-only mmap for a whole model; every
-    ``read_raw``/``read_cached`` is a dict of zero-copy views into it."""
+    ``read_raw``/``read_cached`` is a dict of zero-copy views into it.
 
-    def __init__(self, path: Path):
+    Opening replays the intent journal (crash recovery) unless
+    ``recover=False``; ``verify`` selects the checksum-audit mode (see the
+    module docstring). Entries dropped by recovery or verification are
+    reported in ``self.dropped``."""
+
+    def __init__(self, path: Path, *, verify: str = "lazy",
+                 recover: bool = True):
+        if verify not in ("never", "lazy", "eager"):
+            raise ValueError(f"verify must be never|lazy|eager, got {verify}")
         self.path = Path(path)
+        self.verify = verify
+        self.dropped: List[dict] = []
+        if recover:
+            self.dropped += recover_journal(self.path)
         with open(self.path, "rb") as f:
             self._mm = mmap_mod.mmap(f.fileno(), 0,
                                      access=mmap_mod.ACCESS_READ)
         self._buf = np.frombuffer(self._mm, dtype=np.uint8)
-        self.header = _parse_super_header(self._buf)
+        self.header, self.version, self._hlen = _parse_super_header(
+            self._buf, src=self.path)
+        self.generation = int(self.header.get("generation", 0))
         self.order: List[str] = list(self.header["order"])
         self._layers: Dict[str, dict] = self.header["layers"]
+        self._verified: Set[int] = set()  # id(entry) of checksum-ok entries
+        if verify == "eager":
+            try:
+                self._verify_all()
+            except BaseException:
+                self.close()
+                raise
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):
@@ -222,6 +505,49 @@ class SuperBundle:
         return (min(e["offset"] for e in ents),
                 max(e["offset"] + e["nbytes"] for e in ents))
 
+    # -- verification -------------------------------------------------------
+    def _entry_ok(self, e: dict) -> bool:
+        if "crc32c" not in e:
+            return True  # v2 entry: nothing recorded to verify against
+        seg = self._buf[e["offset"]: e["offset"] + e["nbytes"]]
+        return crc32c(seg) == e["crc32c"]
+
+    def _verify_raw(self, layer: str, entries: List[dict]) -> None:
+        for e in entries:
+            if id(e) in self._verified:
+                continue
+            if not self._entry_ok(e):
+                raise IntegrityError(
+                    f"{self.path}: raw tensor {layer}/{e['name']} failed "
+                    "checksum verification")
+            self._verified.add(id(e))
+
+    def _verify_cached(self, layer: str, kernel: str) -> bool:
+        """True if the entry's checksums hold; a failing entry is dropped
+        from the in-memory header (persisted at the next compaction) and
+        reported in ``self.dropped``."""
+        ents = self._layers[layer]["cache"][kernel]
+        for e in ents:
+            if id(e) in self._verified:
+                continue
+            if not self._entry_ok(e):
+                del self._layers[layer]["cache"][kernel]
+                self.dropped.append({
+                    "layer": layer, "kernel": kernel,
+                    "reason": f"checksum mismatch in {e['name']}"})
+                return False
+            self._verified.add(id(e))
+        return True
+
+    def _verify_all(self) -> None:
+        for layer in self.order:
+            sect = self._layers.get(layer)
+            if sect is None:
+                continue
+            self._verify_raw(layer, sect["raw"])
+            for kern in list(sect.get("cache", {})):
+                self._verify_cached(layer, kern)
+
     # -- reads --------------------------------------------------------------
     def _views(self, entries: List[dict], materialize: bool) -> LayerWeights:
         out: LayerWeights = {}
@@ -233,12 +559,22 @@ class SuperBundle:
 
     def read_raw(self, layer: str, *, materialize: bool = False) -> LayerWeights:
         sect = self._layers.get(layer)
-        return self._views(sect["raw"], materialize) if sect else {}
+        if not sect:
+            return {}
+        if materialize and self.verify == "lazy":
+            self._verify_raw(layer, sect["raw"])
+        return self._views(sect["raw"], materialize)
 
     def read_cached(self, layer: str, kernel: str, *,
                     materialize: bool = False) -> LayerWeights:
         ents = self._layers.get(layer, {}).get("cache", {}).get(kernel)
-        return self._views(ents, materialize) if ents is not None else {}
+        if ents is None:
+            return {}
+        if (materialize and self.verify == "lazy"
+                and not self._verify_cached(layer, kernel)):
+            return {}  # torn/corrupt entry: never served; caller falls
+            #            back to raw + transform
+        return self._views(ents, materialize)
 
     # -- readahead ----------------------------------------------------------
     def advise_willneed(self, layers: Optional[Sequence[str]] = None) -> int:
@@ -278,26 +614,61 @@ class SuperBundle:
         return len(self._buf)
 
     def cache_disk_bytes(self) -> int:
-        """Disk bytes the cache sections occupy (padded 64-byte slots), so
-        ``model + cache`` accounting sums to the real file size."""
+        """Disk bytes the live cache sections occupy (padded 64-byte slots),
+        so ``model + cache`` accounting sums to the real file size."""
         return sum(_pad_to(e["nbytes"]) for l in self.order
                    for ents in self._layers[l].get("cache", {}).values()
                    for e in ents)
 
+    def header_region_bytes(self) -> int:
+        """Bytes before the first possible data segment (fixed prefix +
+        header JSON + slack, padded)."""
+        fixed = _V3_FIXED if self.version >= 3 else _HEADER_FIXED
+        return _pad_to(fixed + self._hlen + HEADER_SLACK)
+
+    def live_disk_bytes(self) -> int:
+        """Padded slot bytes of every live extent (raw + cache)."""
+        return sum(_pad_to(e["nbytes"]) for l in self.order
+                   for e in self._all_entries(l))
+
+    def reclaimable_bytes(self) -> int:
+        """Dead bytes ``compact`` would reclaim: extents orphaned by
+        dropped/superseded cache entries (0 for a freshly-written file)."""
+        return max(0, self.file_size() - self.header_region_bytes()
+                   - self.live_disk_bytes())
+
 
 # ---------------------------------------------------------------------------
-# mutation: in-place cache replace / rewrite-on-grow / drop
+# mutation: journaled in-place commit / rewrite-on-grow / drop / compact
 # ---------------------------------------------------------------------------
 def _load_all(sb: SuperBundle):
-    raw = {l: sb.read_raw(l) for l in sb.order}
-    cache = {l: {k: sb.read_cached(l, k) for k in sb.kernels_cached(l)}
-             for l in sb.order}
+    """Live contents as zero-copy views, for a rewrite. Unless the reader
+    was opened with ``verify="never"``, every extent is audited on the way
+    through: a rewrite restamps fresh checksums, so copying unverified
+    bytes forward would launder latent bit-rot into "verified" data.
+    Corrupt cache entries are dropped (reported in ``sb.dropped``);
+    corrupt raw raises ``IntegrityError``."""
+    audit = sb.verify != "never"
+    raw: Dict[str, LayerWeights] = {}
+    cache: Dict[str, Dict[str, LayerWeights]] = {}
+    for l in sb.order:
+        sect = sb._layers.get(l)
+        if audit and sect:
+            sb._verify_raw(l, sect["raw"])
+        raw[l] = sb.read_raw(l)
+        ks: Dict[str, LayerWeights] = {}
+        for k in list(sb.kernels_cached(l)):
+            if audit and not sb._verify_cached(l, k):
+                continue  # dropped + reported via sb.dropped
+            ks[k] = sb.read_cached(l, k)
+        cache[l] = ks
     return raw, cache
 
 
 def _slot_sizes(sb: SuperBundle) -> Dict[int, int]:
-    """id(entry) -> writable slot size (distance to the next segment or to
-    EOF) — how far an in-place replacement may grow without moving data."""
+    """id(entry) -> writable slot size (distance to the next live segment or
+    to EOF) — how far an in-place replacement may grow without moving data.
+    Dead extents left by dropped entries merge into the preceding slot."""
     all_e = sorted((e for l in sb.order for e in sb._all_entries(l)),
                    key=lambda e: e["offset"])
     size = len(sb._buf)
@@ -308,8 +679,49 @@ def _slot_sizes(sb: SuperBundle) -> Dict[int, int]:
     return slots
 
 
+def _first_data_offset(sb: SuperBundle) -> int:
+    offs = [e["offset"] for l in sb.order for e in sb._all_entries(l)]
+    return min(offs) if offs else sb.file_size()
+
+
+def _commit_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
+                    hdr_bytes: bytes,
+                    slots: List[Tuple[int, bytes]]) -> None:
+    """The crash-atomic in-place commit: journal the intent (slot checksums
+    + full new header), fsync it AHEAD of any container write, then write
+    payload slots and the new header, fsync, and mark the transaction
+    committed. Any tear in between is resolved by ``recover_journal`` at
+    the next open."""
+    jp = journal_path(path)
+    begin = {
+        "txn": _next_txn(jp), "gen": sb.generation,
+        "layer": layer, "kernel": kernel,
+        "slots": [{"offset": off, "nbytes": len(b), "crc32c": crc32c(b)}
+                  for off, b in slots],
+        "header": {"len": len(hdr_bytes), "crc32c": crc32c(hdr_bytes),
+                   "b64": base64.b64encode(hdr_bytes).decode()},
+    }
+    _hook("journal", record=begin, journal=jp)
+    _journal_append(jp, b"B", begin, sync=True)
+    _hook("journal-synced", record=begin, journal=jp)
+    with open(path, "r+b") as f:
+        for off, payload in slots:
+            _hook("slot", file=f, offset=off, payload=payload)
+            f.seek(off)
+            f.write(payload)
+        _hook("slots-written", file=f)
+        _hook("header", file=f, header=hdr_bytes)
+        _write_header_inplace(f, hdr_bytes)  # fsyncs slots + header together
+        _hook("header-written", file=f)
+    _journal_append(jp, b"C", {"txn": begin["txn"]}, sync=False)
+    if jp.stat().st_size > _JOURNAL_RESET_BYTES:
+        _journal_reset(jp)
+
+
 def _try_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
                  entries_new: List[dict], arrs: List[np.ndarray]) -> bool:
+    if sb.version < 3:
+        return False  # pre-checksum container: upgrade via full rewrite
     old = sb._layers[layer]["cache"][kernel]
     if [e["name"] for e in old] != [e["name"] for e in entries_new]:
         return False
@@ -320,29 +732,22 @@ def _try_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
     # the in-place path actually commits
     hdr = json.loads(json.dumps(sb.header))
     for eo, en in zip(hdr["layers"][layer]["cache"][kernel], entries_new):
-        eo.update(dtype=en["dtype"], shape=en["shape"], nbytes=en["nbytes"])
+        eo.update(dtype=en["dtype"], shape=en["shape"], nbytes=en["nbytes"],
+                  crc32c=en["crc32c"])
     hdr_bytes = json.dumps(hdr, separators=(",", ":")).encode()
-    first_off = min(e["offset"] for l in sb.order for e in sb._all_entries(l))
-    if _HEADER_FIXED + len(hdr_bytes) > first_off:
+    if _V3_FIXED + len(hdr_bytes) > _first_data_offset(sb):
         return False
-    offsets = [e["offset"] for e in old]
-    with open(path, "r+b") as f:
-        for off, a in zip(offsets, arrs):
-            f.seek(off)
-            f.write(a.tobytes())
-        f.seek(0)
-        f.write(struct.pack(_HEADER_FMT, MAGIC, VERSION, len(hdr_bytes)))
-        f.write(hdr_bytes)
-        f.write(b"\0" * (first_off - _HEADER_FIXED - len(hdr_bytes)))
+    payloads = [(eo["offset"], a.tobytes()) for eo, a in zip(old, arrs)]
+    _commit_inplace(path, sb, layer, kernel, hdr_bytes, payloads)
     return True
 
 
 def set_cache_entry(path: Path, layer: str, kernel: str,
                     weights: LayerWeights) -> str:
     """Append/replace one layer's post-transformed cache entry. In-place
-    when the payload fits the existing slots and the header region; else
-    rewrite-on-grow (atomic tmp+rename). Returns ``"inplace"`` or
-    ``"rewrite"``."""
+    (crash-atomic, journaled) when the payload fits the existing slots and
+    the header region; else rewrite-on-grow (atomic tmp+rename). Returns
+    ``"inplace"`` or ``"rewrite"``."""
     path = Path(path)
     entries_new, arrs = _payload(weights)
     with SuperBundle(path) as sb:
@@ -356,21 +761,51 @@ def set_cache_entry(path: Path, layer: str, kernel: str,
             raw.setdefault(layer, {})
         cache.setdefault(layer, {})[kernel] = dict(
             zip([e["name"] for e in entries_new], arrs))
-        write_superbundle(path, raw, cache, order=order)
+        write_superbundle(path, raw, cache, order=order,
+                          generation=sb.generation + 1)
     return "rewrite"
 
 
 def drop_cache_entry(path: Path, layer: str, kernel: str) -> bool:
-    """Remove a cache entry; rewrites (and thereby compacts) the file.
-    Returns whether the entry existed."""
+    """Remove a cache entry. On a v3 container this is a journaled in-place
+    header commit that leaves the extent dead on disk — O(header), not
+    O(file) — to be reclaimed by the next ``compact``. Older containers
+    fall back to the compacting rewrite. Returns whether the entry existed."""
     path = Path(path)
     with SuperBundle(path) as sb:
         if not sb.has_cached(layer, kernel):
             return False
+        if sb.version >= 3:
+            hdr = json.loads(json.dumps(sb.header))
+            hdr["layers"][layer]["cache"].pop(kernel)
+            hdr_bytes = json.dumps(hdr, separators=(",", ":")).encode()
+            if _V3_FIXED + len(hdr_bytes) <= _first_data_offset(sb):
+                _commit_inplace(path, sb, layer, kernel, hdr_bytes, [])
+                return True
         raw, cache = _load_all(sb)
         del cache[layer][kernel]
-        write_superbundle(path, raw, cache, order=sb.order)
+        write_superbundle(path, raw, cache, order=sb.order,
+                          generation=sb.generation + 1)
     return True
+
+
+def compact(path: Path, *, order: Optional[Sequence[str]] = None) -> dict:
+    """Reclaim dead extents (dropped/superseded cache entries) by rewriting
+    the live contents into a fresh container via the atomic tmp+rename
+    publish. Every extent is checksum-verified on the way through (a
+    corrupt cache entry is dropped, not copied forward; corrupt raw
+    raises); the generation is bumped and the journal reset. Returns
+    ``{"file_size", "reclaimed_bytes", "dropped"}``."""
+    path = Path(path)
+    with SuperBundle(path, verify="lazy") as sb:
+        before = sb.file_size()
+        raw, cache = _load_all(sb)
+        dropped = list(sb.dropped)
+        keep_order = list(order) if order is not None else list(sb.order)
+        size = write_superbundle(path, raw, cache, order=keep_order,
+                                 generation=sb.generation + 1)
+    return {"file_size": size, "reclaimed_bytes": before - size,
+            "dropped": dropped}
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import LayerStore
+from repro.checkpoint import LayerStore, atomic_write_text
 from repro.core.compile_cache import CompileCache
 from repro.core.pipeline import PipelineRuntime, RunResult
 from repro.core.profiler import CoreModel, OpProfile, ProfileDB, Profiler
@@ -64,12 +64,14 @@ class ColdEngine:
         allow_lossy: bool = False,
         shader_cache: bool = True,
         store_fmt: str = "bundle",
+        store_verify: str = "lazy",
         share_shape_classes: bool = True,
         profile_db: Union[str, Path, ProfileDB, None] = "auto",
     ):
         self.layers = layers
         self.specs = [l.spec for l in layers]
-        self.store = LayerStore(Path(store_dir), fmt=store_fmt)
+        self.store = LayerStore(Path(store_dir), fmt=store_fmt,
+                                verify=store_verify)
         self.core_model = core_model
         self.allow_lossy = allow_lossy
         self.compile_cache = CompileCache(
@@ -267,7 +269,12 @@ class ColdEngine:
                 self.store.write_cached(l.spec.name, kern.name,
                                         kern.transform(raw, l.spec))
             fps[l.spec.name] = {kern.name: fp}
-        fp_path.write_text(json.dumps(fps, indent=1))
+        # durable sidecar commit: a crash mid-write must not leave a torn
+        # fingerprint file silently validating stale cache entries
+        atomic_write_text(fp_path, json.dumps(fps, indent=1), durable=True)
+        # post-materialization maintenance: dropped/superseded cache entries
+        # leave dead extents in a super-bundle container; compact them out
+        maintenance = self.store.maintain()
         gen_s = time.perf_counter() - t0
         # read-vs-stage split of the chosen plan's big-core prep costs
         split = {"read_s": 0.0, "transform_s": 0.0, "stage_s": 0.0}
@@ -290,10 +297,11 @@ class ColdEngine:
             "shape_classes": len(groups),
             "profile_calls": profile_calls,
             "profile_db_hits": db_hits,
+            "store_maintenance": maintenance,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
                         for l, c in zip(self.layers, self.plan.choices)},
         }
-        (self.store.root / "plan.json").write_text(json.dumps(
+        atomic_write_text(self.store.root / "plan.json", json.dumps(
             {"plan": self.plan.to_dict(), "stats": stats}, indent=1))
         return stats
 
@@ -407,6 +415,11 @@ class ColdEngine:
         if mode == "sequential":
             # baseline: warm-best kernels, no cache, fully sequential
             warm_best = self.warm_best_choices()
+            # the ncnn-like baseline models an engine WITHOUT a checksum
+            # layer: land the store's one-off lazy CRC audit here, not
+            # inside the baseline's timed traces
+            self.store.warm_verify(
+                l.spec.name for l in self.layers if l.spec.weight_shapes)
             kernels = {l.spec.name: self._kernel_by_name(l.spec, c.kernel)
                        for l, c in zip(self.layers, warm_best)}
             rt2 = PipelineRuntime(

@@ -119,6 +119,11 @@ class PipelineRuntime:
         if self.use_cache.get(layer, False):
             ts = time.perf_counter()
             w = self.store.read_cached(layer, kern.name)
+            if not w:
+                # the entry was dropped under the plan's feet (journal
+                # recovery / checksum audit tore it out): fall back to
+                # raw + transform rather than executing with no weights
+                w = kern.transform(self.store.read_raw(layer), spec)
             te = time.perf_counter()
             traces.append(OpTrace(layer, "read", core, ts - t0, te - t0))
         else:

@@ -170,6 +170,11 @@ class Profiler:
             return self.store.read_raw(spec.name, mmap=False)
 
         self.calls += 1
+        # pin the store's one-off lazy CRC audit outside the timed region —
+        # it must not inflate the profiled read cost
+        warm = getattr(self.store, "warm_verify", None)
+        if warm is not None:
+            warm([spec.name])
         raw = self.store.read_raw(spec.name)
         t_read = self._time_read(_read_raw)
         if spec.weight_shapes:
@@ -241,6 +246,12 @@ def measure_read_interference(store, layer_names, n_threads: int = 3) -> float:
         except TypeError:  # stores without an mmap switch
             store.read_raw(n)
 
+    # land the store's one-off lazy CRC audit now so neither timed pass
+    # pays it
+    warm = getattr(store, "warm_verify", None)
+    if warm is not None:
+        warm(names)
+
     if CAN_DROP:
         drop_page_cache()
     t0 = time.perf_counter()
@@ -264,8 +275,10 @@ def measure_read_interference(store, layer_names, n_threads: int = 3) -> float:
 
 
 def save_profiles(path: Path, profiles: Dict[str, List[OpProfile]]):
+    from repro.checkpoint import atomic_write_text
+
     out = {k: [p.to_dict() for p in v] for k, v in profiles.items()}
-    path.write_text(json.dumps(out, indent=1))
+    atomic_write_text(Path(path), json.dumps(out, indent=1))
 
 
 def load_profiles(path: Path) -> Optional[Dict[str, List[OpProfile]]]:
@@ -373,12 +386,15 @@ class ProfileDB:
         self._dirty = True
 
     def save(self):
+        from repro.checkpoint import atomic_write_text
+
         if not self._dirty:
             return
         self._hosts[self.host] = self.entries
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
-        tmp.write_text(json.dumps({
-            "version": self.VERSION, "hosts": self._hosts}, indent=1))
-        tmp.replace(self.path)
+        # durable commit: the DB is the cross-decide()/cross-model profile
+        # substrate — a torn file would silently force a full reprofile
+        atomic_write_text(self.path, json.dumps({
+            "version": self.VERSION, "hosts": self._hosts}, indent=1),
+            durable=True)
         self._dirty = False

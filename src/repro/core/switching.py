@@ -97,6 +97,9 @@ class ContinuousSession:
                 kern = eng._kernel_by_name(l.spec, cold_choice.kernel)
                 if cold_choice.use_cache:
                     w = eng.store.read_cached(name, kern.name)
+                    if not w and l.spec.weight_shapes:
+                        # dropped/torn cache entry: re-derive from raw
+                        w = kern.transform(eng.store.read_raw(name), l.spec)
                 else:
                     w = kern.transform(eng.store.read_raw(name), l.spec) \
                         if l.spec.weight_shapes else {}

@@ -13,8 +13,8 @@ import pytest
 from repro.checkpoint import LayerStore
 from repro.checkpoint.bundle import ALIGN
 from repro.checkpoint.superbundle import (
-    HEADER_SLACK, SuperBundle, drop_cache_entry, migrate, read_super_header,
-    set_cache_entry, write_superbundle,
+    HEADER_SLACK, SuperBundle, compact, drop_cache_entry, migrate,
+    read_super_header, set_cache_entry, write_superbundle,
 )
 
 
@@ -96,19 +96,29 @@ def test_cache_entry_inplace_vs_rewrite_on_grow(tmp_path):
             np.asarray(sb.read_raw("block.1")["q8"]), w["block.1"]["q8"])
 
 
-def test_drop_cache_entry_compacts(tmp_path):
+def test_drop_then_compact_reclaims(tmp_path):
+    """Dropping an entry is an O(header) in-place commit that leaves the
+    extent dead on disk; ``compact`` reclaims it via the atomic rewrite."""
     w = _model_weights()
     p = tmp_path / "m.superbundle"
     write_superbundle(p, w, order=list(w))
     base = p.stat().st_size
     set_cache_entry(p, "block.0", "kA",
                     {"w": np.ones((64, 64), np.float32)})
-    assert p.stat().st_size > base
+    grown = p.stat().st_size
+    assert grown > base
     assert drop_cache_entry(p, "block.0", "kA") is True
     assert drop_cache_entry(p, "block.0", "kA") is False
-    assert p.stat().st_size == base  # rewrite compacted the dead segment
+    assert p.stat().st_size == grown  # hole left behind, no rewrite
     with SuperBundle(p) as sb:
         assert not sb.has_cached("block.0", "kA")
+        assert sb.reclaimable_bytes() > 0
+    stats = compact(p)
+    assert stats["reclaimed_bytes"] > 0
+    assert p.stat().st_size == base  # compaction reclaimed the dead extent
+    with SuperBundle(p) as sb:
+        assert not sb.has_cached("block.0", "kA")
+        assert sb.reclaimable_bytes() == 0
 
 
 def test_header_slack_allows_inplace_metadata_change(tmp_path):

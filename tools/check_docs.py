@@ -1,0 +1,83 @@
+"""Docs CI: validate intra-repo markdown links and run the README quickstart.
+
+Two checks, both hard failures:
+
+  1. every relative link target in README.md and docs/*.md exists on disk
+     (external http(s)/mailto links and pure #anchors are skipped);
+  2. the first ```python block in README.md (the quickstart) executes
+     cleanly in a subprocess with PYTHONPATH=src.
+
+Run: python tools/check_docs.py  (from the repo root or anywhere)
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images is unnecessary (targets must exist either
+# way); inline code spans are stripped first so `foo[0](x)` can't false-match
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN_RE = re.compile(r"`[^`]*`")
+_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def check_links() -> list[str]:
+    errors = []
+    files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    for md in files:
+        text = _FENCE_RE.sub("", md.read_text())
+        text = _CODE_SPAN_RE.sub("", text)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:  # pure in-page anchor
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def extract_quickstart() -> str:
+    readme = (REPO / "README.md").read_text()
+    m = re.search(r"```python\n(.*?)```", readme, re.S)
+    if not m:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_quickstart() -> int:
+    code = extract_quickstart()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    print("-- running README quickstart --")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          cwd=REPO, timeout=900)
+    return proc.returncode
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"links ok ({len(list((REPO / 'docs').glob('*.md')))} docs files "
+          "+ README)")
+    rc = run_quickstart()
+    if rc != 0:
+        print("ERROR: README quickstart failed", file=sys.stderr)
+        return rc
+    print("quickstart ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
