@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.checkpoint import LayerStore, atomic_write_text
 from repro.core.compile_cache import CompileCache
-from repro.core.pipeline import PipelineRuntime, RunResult
+from repro.core.pipeline import PipelineJob, PipelineRuntime, RunResult
+from repro.executor.pool import CorePool
 from repro.core.profiler import CoreModel, OpProfile, ProfileDB, Profiler
 from repro.core.registry import (
     Kernel, LayerSpec, StatelessKernel, registry_for, shape_class_key,
@@ -67,6 +68,7 @@ class ColdEngine:
         store_verify: str = "lazy",
         share_shape_classes: bool = True,
         profile_db: Union[str, Path, ProfileDB, None] = "auto",
+        pool: Optional[CorePool] = None,
     ):
         self.layers = layers
         self.specs = [l.spec for l in layers]
@@ -88,6 +90,8 @@ class ColdEngine:
         else:
             self.profile_db = ProfileDB(Path(profile_db))
         self.profiler_factory: Callable[..., Profiler] = Profiler
+        self.pool = pool                  # shared persistent CorePool
+        self._runtimes: Dict[tuple, PipelineRuntime] = {}
         self.plan: Optional[Plan] = None
         self.profiles: Dict[str, List[OpProfile]] = {}
         self._input_example: Optional[np.ndarray] = None
@@ -241,6 +245,7 @@ class ColdEngine:
                 cands[i] = LayerCandidates(layer=name, options=options)
 
         self.plan = schedule(cands, n_little)
+        self._runtimes.clear()     # cached runtimes are plan-bound
         # materialize/drop the weight cache per the plan; entries already
         # materialized by a previous decide() from the SAME raw weights
         # (fingerprint sidecar) are kept as-is, so a warm-DB decide performs
@@ -404,15 +409,32 @@ class ColdEngine:
         return PipelineRuntime(
             self.specs, kernels, use_cache, self.store, jitted,
             n_little=n_little, work_stealing=work_stealing,
-            prep_costs=prep_costs or None,
+            prep_costs=prep_costs or None, pool=self.pool,
         )
+
+    def _runtime(self, *, n_little: int, work_stealing: bool) -> PipelineRuntime:
+        """The steady-path runtime: built once per (plan, n_little,
+        stealing) and reused — no per-run construction, and the underlying
+        persistent CorePool means no per-run threads either."""
+        key = (n_little, work_stealing)
+        rt = self._runtimes.get(key)
+        if rt is None:
+            rt = self._runtimes[key] = self.make_runtime(
+                n_little=n_little, work_stealing=work_stealing)
+        return rt
+
+    def submit_cold(self, x, *, n_little: int = 3, work_stealing: bool = True,
+                    graph_hook=None) -> PipelineJob:
+        """Non-blocking cold run: compile the plan's task graph and enqueue
+        it on the shared pool (the ColdServer's admission path)."""
+        rt = self._runtime(n_little=n_little, work_stealing=work_stealing)
+        return rt.submit(jnp.asarray(x), self.plan, graph_hook=graph_hook)
 
     def run_cold(self, x, *, n_little: int = 3, mode: str = "nnv12") -> RunResult:
         """mode: nnv12 (full) | sequential (ncnn-like baseline) |
         nnv12_nosteal"""
-        rt = self.make_runtime(n_little=n_little,
-                               work_stealing=(mode != "nnv12_nosteal"))
         if mode == "sequential":
+            rt = self.make_runtime(n_little=n_little)
             # baseline: warm-best kernels, no cache, fully sequential
             warm_best = self.warm_best_choices()
             # the ncnn-like baseline models an engine WITHOUT a checksum
@@ -427,7 +449,9 @@ class ColdEngine:
                 self.store, self._jitted_map(warm_best, self._input_example),
                 n_little=0)
             return rt2.run_sequential(jnp.asarray(x))
-        return rt.run(jnp.asarray(x), self.plan)
+        return self.submit_cold(
+            x, n_little=n_little,
+            work_stealing=(mode != "nnv12_nosteal")).result()
 
     def run_warm(self, x, repeats: int = 3) -> float:
         """Steady-state latency with warm-best kernels, weights resident."""

@@ -1,25 +1,24 @@
 """Online pipelined runtime — §3.1.3 / §3.3 at execution time.
 
-Executes a scheduling Plan with real threads and real work:
-  * one worker thread per (simulated) little core, each draining its queue of
-    preparation ops (disk read + weights transform + device staging — numpy
-    and the device transfer release the GIL for the heavy parts);
-  * the caller's thread plays the big-core cluster: it runs any big-core
-    preps first, then the execution chain e_1..e_N, blocking on each layer's
-    prep-completion event;
-  * work stealing: an idle worker steals from the *tail* of the queue with
-    the most remaining preparation time (§3.3 'dealing with hardware
-    dynamics') — the same rule the scheduler's simulator models.
+Since PR 5 this module is a thin façade over the ``repro.executor``
+subsystem: ``run`` compiles the scheduling ``Plan`` into a typed task graph
+(``read → transform → stage → execute`` with per-layer deps and core
+affinities — ``executor.graph.compile_plan``) and submits it to the
+process-wide persistent ``CorePool``. The pool's big/little workers are
+created once and reused across runs *and models*: the steady path performs
+no thread creation, and an idle worker steals the tail of the prep queue
+with the most remaining preparation time (§3.3, the same
+``pick_steal_donor`` rule the scheduler's simulator models).
 
-Preparation now ends with an explicit *stage* op (``jax.device_put``): the
-weights arrive on device as part of prep, off the critical exec chain, so
-execute ops run with device-resident weights and contain no host→device
-conversion. With ``stage_in_prep=False`` staging is deferred to the big
-cores, where ``prefetch=True`` overlaps layer i+1's device transfer with
-layer i's execution.
+Preparation still ends with an explicit *stage* op (``jax.device_put``):
+weights arrive on device as part of prep, off the critical exec chain. With
+``stage_in_prep=False`` staging is deferred to ``any``-affinity tasks —
+whoever idles first stages layer i+1 while layer i executes (the old
+dedicated "stager" threads are gone); ``prefetch=False`` pins deferred
+staging to the big cores, strictly inline before each execute.
 
-Every op's (start, end) is recorded for the benchmark breakdowns; trace
-kinds are ``read`` / ``transform`` / ``stage`` / ``execute``.
+Every op's (start, end) is recorded per job for the benchmark breakdowns;
+trace kinds are ``read`` / ``transform`` / ``stage`` / ``execute``.
 """
 from __future__ import annotations
 
@@ -34,15 +33,10 @@ import jax.numpy as jnp
 from repro.core.registry import Kernel, LayerSpec
 from repro.core.scheduler import Plan
 from repro.core.staging import stage_weights
+from repro.executor.graph import OpTrace, compile_plan
+from repro.executor.pool import CorePool, Job, get_core_pool
 
-
-@dataclass
-class OpTrace:
-    layer: str
-    kind: str
-    core: str
-    start: float
-    end: float
+__all__ = ["OpTrace", "PipelineJob", "PipelineRuntime", "RunResult"]
 
 
 @dataclass
@@ -59,6 +53,32 @@ class RunResult:
         return agg
 
 
+class PipelineJob:
+    """Handle for one in-flight cold run submitted to the pool."""
+
+    def __init__(self, job: Job, state: Dict[str, Any],
+                 weights: Dict[str, Any]):
+        self.job = job
+        self._state = state
+        self._weights = weights
+
+    @property
+    def t0(self) -> float:
+        return self.job.t0
+
+    @property
+    def traces(self) -> List[OpTrace]:
+        return self.job.traces
+
+    def done(self) -> bool:
+        return self.job.done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RunResult:
+        self.job.wait(timeout)
+        return RunResult(output=self._state["y"], total_s=self.job.total_s,
+                         traces=self.job.traces, weights=self._weights)
+
+
 class PipelineRuntime:
     def __init__(
         self,
@@ -72,6 +92,7 @@ class PipelineRuntime:
         stage_in_prep: bool = True,
         prefetch: bool = True,
         prep_costs: Optional[Dict[str, float]] = None,
+        pool: Optional[CorePool] = None,
     ):
         self.specs = {s.name: s for s in specs}
         self.order = [s.name for s in specs]
@@ -83,13 +104,19 @@ class PipelineRuntime:
         self.work_stealing = work_stealing
         self.stage_in_prep = stage_in_prep
         self.prefetch = prefetch
+        self.pool = pool
         # per-layer prep-cost estimates drive donor selection when stealing;
         # weight bytes are the fallback proxy when no profile is plumbed in
         self.prep_costs = prep_costs or {
             s.name: float(s.weight_bytes) for s in specs}
 
-    # -- device staging (the new prep tail) ---------------------------------
+    # -- device staging (the prep tail) -------------------------------------
     _device_put = staticmethod(stage_weights)
+
+    def _get_pool(self) -> CorePool:
+        if self.pool is None:
+            self.pool = get_core_pool(n_little=self.n_little)
+        return self.pool
 
     def _hint_readahead(self, layers: List[str]):
         """Super-bundle stores can madvise(WILLNEED) the extents the plan
@@ -105,11 +132,12 @@ class PipelineRuntime:
         ra(first)
 
     # -- one preparation op (read [+ transform] + stage) --------------------
+    # kept whole for callers that prep a single layer synchronously (tests,
+    # fallback paths); the task graph uses the finer-grained ops below
     def _prepare(self, layer: str, weights_out: Dict[str, Any],
                  traces: List[OpTrace], core: str, t0: float, lock,
                  staged: Optional[Dict[str, threading.Event]] = None):
         spec = self.specs[layer]
-        kern = self.kernels[layer]
         if not spec.weight_shapes:
             with lock:
                 weights_out[layer] = {}
@@ -118,19 +146,14 @@ class PipelineRuntime:
             return
         if self.use_cache.get(layer, False):
             ts = time.perf_counter()
-            w = self.store.read_cached(layer, kern.name)
-            if not w:
-                # the entry was dropped under the plan's feet (journal
-                # recovery / checksum audit tore it out): fall back to
-                # raw + transform rather than executing with no weights
-                w = kern.transform(self.store.read_raw(layer), spec)
+            w = self._read_op(layer)
             te = time.perf_counter()
             traces.append(OpTrace(layer, "read", core, ts - t0, te - t0))
         else:
             ts = time.perf_counter()
             raw = self.store.read_raw(layer)
             tm = time.perf_counter()
-            w = kern.transform(raw, spec)
+            w = self.kernels[layer].transform(raw, spec)
             te = time.perf_counter()
             traces.append(OpTrace(layer, "read", core, ts - t0, tm - t0))
             traces.append(OpTrace(layer, "transform", core, tm - t0, te - t0))
@@ -146,101 +169,91 @@ class PipelineRuntime:
             with lock:
                 weights_out[layer] = w
 
-    def run(self, x, plan: Plan) -> RunResult:
+    def _read_op(self, layer: str):
+        """The 'read' task body: cached entry (§3.1.2) or raw weights."""
+        spec = self.specs[layer]
+        kern = self.kernels[layer]
+        if self.use_cache.get(layer, False):
+            w = self.store.read_cached(layer, kern.name)
+            if not w:
+                # the entry was dropped under the plan's feet (journal
+                # recovery / checksum audit tore it out): fall back to
+                # raw + transform rather than executing with no weights
+                w = kern.transform(self.store.read_raw(layer), spec)
+            return w
+        return self.store.read_raw(layer)
+
+    # -- graph compilation + submission -------------------------------------
+    def submit(self, x, plan: Plan, *, graph_hook=None) -> PipelineJob:
+        """Compile the plan into a task graph and hand it to the persistent
+        pool; returns immediately with a :class:`PipelineJob`.
+
+        ``graph_hook(graph, weights, lock)`` may append extra tasks (e.g.
+        the LLM bridge's decode-path packing) before submission."""
         t0 = time.perf_counter()
-        weights: Dict[str, Any] = {}
-        traces: List[OpTrace] = []
+        weights: Dict[str, Any] = {
+            n: {} for n in self.order if not self.specs[n].weight_shapes}
+        pending: Dict[str, Any] = {}     # intra-chain intermediates
         lock = threading.Lock()
-        done_events = {name: threading.Event() for name in self.order}
-        staged = {name: threading.Event() for name in self.order}
-        stage_started: Dict[str, bool] = {}
+        state: Dict[str, Any] = {"y": jnp.asarray(x)}
 
         queues = [[self.order[i] for i in q] for q in plan.little_queues]
-        qlock = threading.Lock()
-        stagers: List[threading.Thread] = []
         self._hint_readahead(
             [q[0] for q in queues if q]
             + [self.order[i] for i in plan.big_prep]
             + self.order[: 2 * (len(queues) + 1)])
 
-        def stage(name: str, core: str):
-            """Stage one prepped layer onto the device (idempotent)."""
-            with lock:
-                if stage_started.get(name):
-                    return
-                stage_started[name] = True
-                w = weights[name]
-            ts = time.perf_counter()
-            wd = self._device_put(w)
-            te = time.perf_counter()
-            with lock:
-                weights[name] = wd
-            traces.append(OpTrace(name, "stage", core, ts - t0, te - t0))
-            staged[name].set()
+        graph = compile_plan(
+            self.order, plan,
+            weighted={n: bool(self.specs[n].weight_shapes)
+                      for n in self.order},
+            use_cache=self.use_cache,
+            prep_costs=self.prep_costs,
+            stage_in_prep=self.stage_in_prep,
+            deferred_stage_affinity="any" if self.prefetch else "big",
+        )
 
-        def steal() -> Optional[str]:
-            # §3.3: steal the TAIL (the layer the exec chain needs last) of
-            # the donor queue with the most remaining prep time — mirrors
-            # scheduler.simulate's work-stealing rule.
-            with qlock:
-                donor = max(
-                    queues, default=None,
-                    key=lambda q: sum(self.prep_costs.get(n, 0.0) for n in q))
-                if donor:
-                    return donor.pop()
-            return None
+        def read_fn(name):
+            def fn():
+                pending[name] = self._read_op(name)
+            return fn
 
-        def worker(j: int):
-            core = f"little{j}"
-            while True:
-                with qlock:
-                    layer = queues[j].pop(0) if queues[j] else None
-                if layer is None and self.work_stealing:
-                    layer = steal()
-                if layer is None:
-                    return
-                self._prepare(layer, weights, traces, core, t0, lock, staged)
-                done_events[layer].set()
+        def transform_fn(name):
+            def fn():
+                pending[name] = self.kernels[name].transform(
+                    pending[name], self.specs[name])
+            return fn
 
-        threads = [threading.Thread(target=worker, args=(j,), daemon=True)
-                   for j in range(len(queues))]
-        for th in threads:
-            th.start()
+        def stage_fn(name):
+            def fn():
+                w = self._device_put(pending.pop(name))
+                with lock:
+                    weights[name] = w
+            return fn
 
-        # big cores: preps first, then the execution chain
-        for i in plan.big_prep:
-            layer = self.order[i]
-            self._prepare(layer, weights, traces, "big", t0, lock, staged)
-            done_events[layer].set()
+        def execute_fn(name):
+            def fn():
+                with lock:
+                    w = weights.get(name, {})
+                y = self.jitted[name](w, state["y"])
+                jax.block_until_ready(y)
+                state["y"] = y
+            return fn
 
-        y = x
-        for i, name in enumerate(self.order):
-            done_events[name].wait()
-            if not staged[name].is_set():
-                stage(name, "big")      # deferred staging (stage_in_prep=False)
-            if self.prefetch and i + 1 < len(self.order):
-                nxt = self.order[i + 1]
-                if done_events[nxt].is_set() and not staged[nxt].is_set():
-                    # overlap layer i+1's device transfer with e_i; tracked
-                    # so its 'stage' trace lands before RunResult is built
-                    th = threading.Thread(target=stage, args=(nxt, "stager"),
-                                          daemon=True)
-                    stagers.append(th)
-                    th.start()
-            staged[name].wait()
-            with lock:
-                w = weights[name]
-            ts = time.perf_counter()
-            y = self.jitted[name](w, y)
-            jax.block_until_ready(y)
-            te = time.perf_counter()
-            traces.append(OpTrace(name, "execute", "big", ts - t0, te - t0))
-        for th in threads:
-            th.join()
-        for th in stagers:
-            th.join()
-        return RunResult(output=y, total_s=time.perf_counter() - t0,
-                         traces=traces, weights=weights)
+        binders = {"read": read_fn, "transform": transform_fn,
+                   "stage": stage_fn, "execute": execute_fn}
+        for task in graph.tasks:
+            task.fn = binders[task.kind](task.layer)
+        if graph_hook is not None:
+            graph_hook(graph, weights, lock)
+
+        job = self._get_pool().submit(
+            graph, name=f"cold:{self.order[0]}..{self.order[-1]}",
+            allow_steal=self.work_stealing, t0=t0)
+        return PipelineJob(job, state, weights)
+
+    def run(self, x, plan: Plan) -> RunResult:
+        return self.submit(x, plan).result()
 
     # -- baseline: fully sequential cold inference (ncnn-like) --------------
     def run_sequential(self, x, kernels: Optional[Dict[str, Kernel]] = None) -> RunResult:

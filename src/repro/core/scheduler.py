@@ -29,7 +29,7 @@ import itertools
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.profiler import CoreModel, OpProfile
 
@@ -96,6 +96,20 @@ def pareto_filter(cands: List[Tuple[Choice, float, float]]) -> List[Tuple[Choice
 # ---------------------------------------------------------------------------
 # deterministic simulation (also the runtime model for work stealing)
 # ---------------------------------------------------------------------------
+def pick_steal_donor(remaining: Dict, costs: Callable[[object], float]):
+    """§3.3 work-stealing donor rule, shared by ``simulate`` and the
+    executor's ``CorePool``: an idle core steals from the queue with the
+    most *remaining preparation time* (and takes that queue's TAIL — the
+    layer the exec chain needs last). ``remaining`` maps a queue key to its
+    outstanding items; ``costs`` prices one item. Returns the donor key, or
+    None when every queue is empty."""
+    donor = None
+    best = 0.0
+    for key, items in remaining.items():
+        c = sum(costs(i) for i in items)
+        if items and (donor is None or c > best):
+            donor, best = key, c
+    return donor
 def simulate(
     prep_little: Sequence[float],   # per layer: prep time ON A LITTLE CORE
     prep_big: Sequence[float],      # per layer: prep time ON BIG CORES
@@ -142,9 +156,9 @@ def simulate(
             if remaining[j]:
                 i = remaining[j].pop(0)
             else:
-                donor = max(remaining, key=lambda j2: sum(
-                    prep_little[i2] for i2 in remaining[j2]))
-                if not remaining[donor]:
+                donor = pick_steal_donor(remaining,
+                                         lambda i2: prep_little[i2])
+                if donor is None:
                     break
                 i = remaining[donor].pop()  # steal the tail
             t_cores[j] += prep_little[i] * core_load.get(j, 1.0)

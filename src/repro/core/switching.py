@@ -14,7 +14,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from repro.core.engine import ColdEngine
 from repro.core.pipeline import RunResult, OpTrace
 from repro.core.staging import stage_weights
+from repro.executor.graph import TaskGraph
+from repro.executor.pool import Job
 
 
 @dataclass
@@ -30,7 +32,7 @@ class ContinuousSession:
     n_little: int = 3
     warm_weights: Dict[str, Any] = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock)
-    _bg: List[threading.Thread] = field(default_factory=list)
+    _bg: Optional[Job] = None
 
     cold_weights: Dict[str, Any] = field(default_factory=dict)
 
@@ -45,6 +47,9 @@ class ContinuousSession:
         return res
 
     def _start_background_prep(self):
+        """Queue K_warm − K_cold preps as one 'any'-affinity job on the
+        persistent pool: idle little workers pick them up between cold
+        runs, with no per-call thread creation."""
         eng = self.engine
         warm = eng.warm_best_choices()
         todo = [
@@ -52,28 +57,35 @@ class ContinuousSession:
             zip(eng.layers, warm, eng.plan.choices)
             if wc.kernel != cc.kernel and l.spec.weight_shapes
         ]
+        if not todo:
+            self._bg = None
+            return
 
         def prep(l, wc):
-            kern = eng._kernel_by_name(l.spec, wc.kernel)
-            raw = eng.store.read_raw(l.spec.name)
-            w = kern.transform(raw, l.spec)
-            with self._lock:
-                # stage_weights (not bare jnp.asarray): identity transforms
-                # hand back read-only mmap views, which CPU XLA would alias
-                # — leaving their disk I/O to fault in during execute
-                self.warm_weights[l.spec.name] = (wc.kernel, stage_weights(w))
+            def fn():
+                kern = eng._kernel_by_name(l.spec, wc.kernel)
+                raw = eng.store.read_raw(l.spec.name)
+                w = kern.transform(raw, l.spec)
+                with self._lock:
+                    # stage_weights (not bare jnp.asarray): identity
+                    # transforms hand back read-only mmap views, which CPU
+                    # XLA would alias — leaving their disk I/O to fault in
+                    # during execute
+                    self.warm_weights[l.spec.name] = (
+                        wc.kernel, stage_weights(w))
+            return fn
 
-        for i, (l, wc) in enumerate(todo):
-            th = threading.Thread(target=prep, args=(l, wc), daemon=True)
-            th.start()
-            self._bg.append(th)
+        g = TaskGraph()
+        for l, wc in todo:
+            g.add(l.spec.name, "warm_prep", affinity="any", fn=prep(l, wc))
+        rt = eng._runtime(n_little=self.n_little, work_stealing=True)
+        self._bg = rt._get_pool().submit(g, name="warm-switch")
 
     def warm_infer(self, x, wait: bool = False) -> RunResult:
         """Subsequent inference: use warm kernels where prepared."""
         eng = self.engine
-        if wait:
-            for th in self._bg:
-                th.join()
+        if wait and self._bg is not None:
+            self._bg.wait()
         t0 = time.perf_counter()
         traces = []
         # weights for layers not yet switched: use the cold plan's kernels

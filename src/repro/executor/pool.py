@@ -1,0 +1,394 @@
+"""Persistent asymmetric core pools.
+
+One process-wide ``CorePool`` holds the big/little worker threads the
+pipelined runtime used to spawn per run. Threads are created once (the pool
+grows on demand) and reused across runs *and models*: the steady cold-serving
+path performs zero thread creation. Jobs — compiled ``TaskGraph``s — are
+submitted concurrently; every task records an ``OpTrace`` against its own
+job's clock, so traces and benchmark breakdowns stay strictly per-run.
+
+Scheduling rules (mirroring the plan simulator, §3.3):
+
+  * a little worker drains its own lane in order; when idle it *steals* —
+    donor = the lane with the most remaining prep cost (the shared
+    ``scheduler.pick_steal_donor`` rule), item = the donor's TAIL layer,
+    whose whole prep chain is retargeted to the thief's lane;
+  * big workers run ``big``-affinity tasks in tid order (the plan's big
+    preps first, then the exec chain as its deps release);
+  * ``any``-affinity tasks (deferred staging, background packing) go to
+    whoever idles first — an idle little core prefetch-stages layer i+1
+    while the big core executes layer i, without a dedicated stager thread.
+
+A failing task cancels the rest of its job (other jobs are untouched) and
+re-raises from ``Job.result()``/``wait()``.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.scheduler import pick_steal_donor
+from repro.executor.graph import OpTrace, PREP_KINDS, TaskGraph
+
+_PENDING, _READY, _RUNNING, _DONE, _CANCELLED = range(5)
+
+
+_JOB_SEQ = itertools.count(1)
+
+
+class Job:
+    """One submitted task graph: per-run traces, completion event, error."""
+
+    def __init__(self, graph: TaskGraph, name: str, t0: Optional[float],
+                 allow_steal: bool):
+        self.seq = next(_JOB_SEQ)
+        self.graph = graph
+        self.name = name
+        self.t0 = time.perf_counter() if t0 is None else t0
+        self.allow_steal = allow_steal
+        self.traces: List[OpTrace] = []
+        self.total_s: float = 0.0
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.on_preps_done: List[Callable[["Job"], None]] = []
+        self._cb_lock = threading.Lock()
+
+        n = len(graph.tasks)
+        self._state = [_PENDING] * n
+        self._pending = [len(t.deps) for t in graph.tasks]
+        self._children: List[List[int]] = [[] for _ in range(n)]
+        for t in graph.tasks:
+            for d in t.deps:
+                self._children[d].append(t.tid)
+        self._done_count = 0
+        self._prep_left = sum(
+            1 for t in graph.tasks if t.kind in PREP_KINDS)
+        # prep-free jobs have no worker to fire preps-done: treat the prep
+        # phase as already over, so late-registered callbacks run inline
+        self._preps_fired = self._prep_left == 0
+        self._preps_cb_fired = self._preps_fired
+        # ready lists per affinity; little lanes also track layer order and
+        # remaining (unstarted) cost for the steal-donor rule
+        self._ready_big: List[int] = []
+        self._ready_any: List[int] = []
+        self._ready_little: Dict[int, List[int]] = {}
+        self._lane_layers: Dict[int, List[str]] = {}
+        self._layer_chain: Dict[str, List[int]] = {}
+        for t in graph.tasks:
+            if t.affinity == "little" and t.kind in PREP_KINDS:
+                lane = self._lane_layers.setdefault(t.lane, [])
+                if t.layer not in lane:
+                    lane.append(t.layer)
+                self._layer_chain.setdefault(t.layer, []).append(t.tid)
+        # a job is served by exactly the little lanes its plan scheduled —
+        # a wider pool must not hand a run more little cores than the
+        # plan's makespan modeled (extra workers still help with 'any'
+        # tasks and other jobs)
+        lanes = graph.lanes()
+        self.n_lanes = (max(lanes) + 1) if lanes else 0
+        for t in graph.tasks:
+            if self._pending[t.tid] == 0:
+                self._mark_ready(t.tid)
+
+    # -- internal (all called under the pool lock) --------------------------
+    def _mark_ready(self, tid: int):
+        t = self.graph.tasks[tid]
+        self._state[tid] = _READY
+        if t.affinity == "big":
+            self._ready_big.append(tid)
+        elif t.affinity == "any":
+            self._ready_any.append(tid)
+        else:
+            self._ready_little.setdefault(t.lane, []).append(tid)
+
+    def _lane_remaining(self) -> Dict[int, List[str]]:
+        """Per lane: layers whose prep chain has not started (stealable)."""
+        out: Dict[int, List[str]] = {}
+        for lane, layers in self._lane_layers.items():
+            ls = [n for n in layers
+                  if self._state[self._layer_chain[n][0]] == _READY]
+            if ls:
+                out[lane] = ls
+        return out
+
+    def _chain_cost(self, layer: str) -> float:
+        return self.graph.tasks[self._layer_chain[layer][0]].cost
+
+    def _move_layer(self, layer: str, to_lane: int):
+        """Retarget one layer's unstarted prep chain to ``to_lane``."""
+        for tid in self._layer_chain[layer]:
+            t = self.graph.tasks[tid]
+            if self._state[tid] == _READY:
+                self._ready_little[t.lane].remove(tid)
+                self._ready_little.setdefault(to_lane, []).append(tid)
+            t.lane = to_lane
+        for lane, layers in self._lane_layers.items():
+            if layer in layers and lane != to_lane:
+                layers.remove(layer)
+                break
+        self._lane_layers.setdefault(to_lane, []).append(layer)
+
+    def _finished(self) -> bool:
+        return self._done_count >= len(self.graph.tasks)
+
+    # -- public -------------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> "Job":
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"job {self.name!r} still running")
+        if self.error is not None:
+            raise self.error
+        return self
+
+    def preps_done(self) -> bool:
+        return self._preps_fired
+
+    def add_preps_callback(self, cb: Callable[["Job"], None]) -> None:
+        """Register a preps-done callback; runs immediately if the job's
+        prep phase already finished (registration is race-free w.r.t. the
+        worker that fires the callbacks)."""
+        with self._cb_lock:
+            if not self._preps_cb_fired:
+                self.on_preps_done.append(cb)
+                return
+        cb(self)
+
+    def _fire_preps_callbacks(self):
+        with self._cb_lock:
+            self._preps_cb_fired = True
+            cbs = list(self.on_preps_done)
+        for cb in cbs:
+            cb(self)
+
+
+def _pop_min(lst: List[int]) -> int:
+    k = min(range(len(lst)), key=lst.__getitem__)
+    return lst.pop(k)
+
+
+class CorePool:
+    """Persistent big.LITTLE worker pools executing task graphs."""
+
+    def __init__(self, n_big: int = 1, n_little: int = 3,
+                 name: str = "corepool"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._jobs: List[Job] = []
+        self._shutdown = False
+        self.threads_created = 0
+        self.jobs_completed = 0
+        self.steals = 0
+        self._big: List[threading.Thread] = []
+        self._little: List[threading.Thread] = []
+        self.ensure(n_little=n_little, n_big=n_big)
+
+    @property
+    def n_big(self) -> int:
+        return len(self._big)
+
+    @property
+    def n_little(self) -> int:
+        return len(self._little)
+
+    def ensure(self, n_little: Optional[int] = None,
+               n_big: Optional[int] = None) -> "CorePool":
+        """Grow (never shrink) the worker sets. Idempotent; the steady
+        serving path calls this with sizes the pool already has, creating
+        zero threads."""
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("pool is shut down")
+            while n_big is not None and len(self._big) < n_big:
+                i = len(self._big)
+                th = threading.Thread(
+                    target=self._big_loop, args=(i,), daemon=True,
+                    name=f"{self.name}-big{i}")
+                self._big.append(th)
+                self.threads_created += 1
+                th.start()
+            while n_little is not None and len(self._little) < n_little:
+                j = len(self._little)
+                th = threading.Thread(
+                    target=self._little_loop, args=(j,), daemon=True,
+                    name=f"{self.name}-little{j}")
+                self._little.append(th)
+                self.threads_created += 1
+                th.start()
+        return self
+
+    def submit(self, graph: TaskGraph, *, name: str = "job",
+               allow_steal: bool = True, t0: Optional[float] = None) -> Job:
+        graph.validate()
+        for t in graph.tasks:
+            if t.fn is None:
+                raise ValueError(
+                    f"task {t.layer}/{t.kind} has no bound fn")
+        lanes = graph.lanes()
+        self.ensure(n_little=(max(lanes) + 1 if lanes else None), n_big=1)
+        job = Job(graph, name, t0, allow_steal)
+        with self._cv:
+            if self._shutdown:
+                raise RuntimeError("pool is shut down")
+            if job._finished():          # empty graph
+                job.total_s = time.perf_counter() - job.t0
+                job.done.set()
+                self.jobs_completed += 1
+            else:
+                self._jobs.append(job)
+                self._cv.notify_all()
+        return job
+
+    def shutdown(self):
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        for th in self._big + self._little:
+            th.join(timeout=5.0)
+
+    # -- worker internals ----------------------------------------------------
+    def _next_for_little(self, j: int) -> Optional[Tuple[Job, int]]:
+        for job in self._jobs:
+            rl = job._ready_little.get(j)
+            if rl:
+                return job, _pop_min(rl)
+        # steal: donor lane (any job that allows it) with most remaining
+        # prep cost; take its tail layer's whole chain
+        best: Optional[Tuple[Job, int, List[str]]] = None
+        best_cost = 0.0
+        for job in self._jobs:
+            if not job.allow_steal or j >= job.n_lanes:
+                continue
+            remaining = job._lane_remaining()
+            remaining.pop(j, None)      # own lane is empty (checked above)
+            donor = pick_steal_donor(remaining, job._chain_cost)
+            if donor is None:
+                continue
+            cost = sum(job._chain_cost(n) for n in remaining[donor])
+            if best is None or cost > best_cost:
+                best, best_cost = (job, donor, remaining[donor]), cost
+        if best is not None:
+            job, donor, layers = best
+            job._move_layer(layers[-1], j)   # steal the tail
+            self.steals += 1
+            rl = job._ready_little.get(j)
+            if rl:
+                return job, _pop_min(rl)
+        for job in self._jobs:
+            if job._ready_any:
+                return job, _pop_min(job._ready_any)
+        return None
+
+    def _next_for_big(self) -> Optional[Tuple[Job, int]]:
+        for job in self._jobs:
+            if job._ready_big:
+                return job, _pop_min(job._ready_big)
+        for job in self._jobs:
+            if job._ready_any:
+                return job, _pop_min(job._ready_any)
+        return None
+
+    def _worker_loop(self, core: str,
+                     pick: Callable[[], Optional[Tuple[Job, int]]]):
+        while True:
+            with self._cv:
+                item = None
+                while item is None:
+                    if self._shutdown:
+                        return
+                    item = pick()
+                    if item is None:
+                        self._cv.wait()
+                job, tid = item
+                job._state[tid] = _RUNNING
+            self._run(job, tid, core)
+
+    def _big_loop(self, i: int):
+        self._worker_loop("big" if i == 0 else f"big{i}", self._next_for_big)
+
+    def _little_loop(self, j: int):
+        self._worker_loop(f"little{j}",
+                          lambda: self._next_for_little(j))
+
+    def _run(self, job: Job, tid: int, core: str):
+        task = job.graph.tasks[tid]
+        err: Optional[BaseException] = None
+        ts = time.perf_counter()
+        try:
+            task.fn()
+        except BaseException as e:      # noqa: BLE001 — forwarded to caller
+            err = e
+        te = time.perf_counter()
+        if err is None:
+            job.traces.append(OpTrace(task.layer, task.kind, core,
+                                      ts - job.t0, te - job.t0))
+        fire_preps = False
+        with self._cv:
+            if err is not None:
+                job.error = err
+                for t2 in job.graph.tasks:
+                    if job._state[t2.tid] in (_PENDING, _READY):
+                        job._state[t2.tid] = _CANCELLED
+                        job._done_count += 1
+                job._ready_big.clear()
+                job._ready_any.clear()
+                job._ready_little.clear()
+                # a failed job must still release its admission slot:
+                # cancelled preps will never complete, so fire preps-done now
+                if not job._preps_fired:
+                    job._preps_fired = True
+                    fire_preps = True
+            job._state[tid] = _DONE
+            job._done_count += 1
+            if task.kind in PREP_KINDS:
+                job._prep_left -= 1
+                if job._prep_left == 0 and not job._preps_fired:
+                    job._preps_fired = True
+                    fire_preps = True
+            if err is None:
+                for child in job._children[tid]:
+                    job._pending[child] -= 1
+                    if job._pending[child] == 0 \
+                            and job._state[child] == _PENDING:
+                        job._mark_ready(child)
+            finished = job._finished()
+            if finished:
+                self._jobs.remove(job)
+                self.jobs_completed += 1
+                job.total_s = te - job.t0
+            self._cv.notify_all()
+        # callbacks and the done event fire outside the pool lock so they
+        # may submit follow-up work without deadlocking
+        if fire_preps:
+            job._fire_preps_callbacks()
+        if finished:
+            job.done.set()
+
+
+# ---------------------------------------------------------------------------
+# the process-wide pool
+# ---------------------------------------------------------------------------
+_GLOBAL: Optional[CorePool] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def get_core_pool(n_little: int = 3, n_big: int = 2) -> CorePool:
+    """The process-wide persistent pool, created on first use and grown on
+    demand — every runtime and every model share it."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is None:
+            _GLOBAL = CorePool(n_big=n_big, n_little=n_little, name="global")
+            return _GLOBAL
+    return _GLOBAL.ensure(n_little=n_little, n_big=n_big)
+
+
+def reset_core_pool() -> None:
+    """Shut the global pool down (tests only — the whole point of the pool
+    is that production never does this)."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is not None:
+            _GLOBAL.shutdown()
+            _GLOBAL = None

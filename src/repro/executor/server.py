@@ -1,0 +1,197 @@
+"""ColdServer — multi-model cold serving on one persistent core pool.
+
+The server owns N ``ColdEngine``s (one per model, each with its own store
+under the server root) and shares across all of them:
+
+  * the process-wide ``CorePool`` — one set of big/little workers serves
+    every model's prep chains and exec chains, with per-job accounting;
+  * one user-level ``ProfileDB`` — a second model whose layers fall into
+    already-measured shape classes performs zero profile calls;
+  * an **admission controller**: §3.2 measures I/O interference between
+    co-running preparation ops *per host*, so the number of cold starts
+    simultaneously in their prep phase is capped (``max_concurrent_preps``);
+    further cold starts queue at admission and enter as slots free
+    (released the moment a job's last read/transform/stage finishes —
+    its exec tail does not hold the slot);
+  * an **LRU residency budget**: finished cold starts leave their staged
+    weights device-resident for warm reuse; when the total exceeds
+    ``memory_budget_bytes`` the least-recently-used model's weights are
+    evicted (its next request is simply cold again).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core.engine import ColdEngine, LayerDef
+from repro.core.pipeline import PipelineJob, RunResult
+from repro.core.profiler import ProfileDB
+from repro.executor.pool import CorePool, get_core_pool
+
+
+def _weights_nbytes(weights: Optional[Dict[str, Any]]) -> int:
+    total = 0
+    for w in (weights or {}).values():
+        for v in w.values():
+            total += int(getattr(v, "nbytes", 0))
+    return total
+
+
+class ColdStart:
+    """Handle for one admitted cold-start request."""
+
+    def __init__(self, server: "ColdServer", model: str, job: PipelineJob):
+        self.server = server
+        self.model = model
+        self.job = job
+
+    @property
+    def traces(self):
+        return self.job.traces
+
+    def done(self) -> bool:
+        return self.job.done()
+
+    def result(self, timeout: Optional[float] = None) -> RunResult:
+        res = self.job.result(timeout)
+        self.server._register_resident(self.model, res)
+        return res
+
+
+class ColdServer:
+    def __init__(
+        self,
+        root,
+        *,
+        pool: Optional[CorePool] = None,
+        n_little: int = 3,
+        n_big: int = 2,
+        max_concurrent_preps: int = 2,
+        memory_budget_bytes: Optional[int] = None,
+        share_profile_db: bool = True,
+    ):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.pool = pool or get_core_pool(n_little=n_little, n_big=n_big)
+        self.n_little = n_little
+        self.max_concurrent_preps = max_concurrent_preps
+        self.memory_budget_bytes = memory_budget_bytes
+        # one user-level profile DB shared by every managed engine: sibling
+        # models with equivalent shape classes skip profiling entirely
+        self.profile_db: Optional[ProfileDB] = (
+            ProfileDB(self.root / "profile_db.json") if share_profile_db
+            else None)
+        self.engines: Dict[str, ColdEngine] = {}
+        self._admission = threading.Semaphore(max_concurrent_preps)
+        self._lock = threading.Lock()
+        self._resident: "OrderedDict[str, int]" = OrderedDict()  # name->bytes
+        self._resident_weights: Dict[str, Dict[str, Any]] = {}
+        self.stats = {"admitted": 0, "evictions": 0, "active_preps": 0,
+                      "max_active_preps": 0, "cold_starts": 0}
+
+    # -- model management ---------------------------------------------------
+    def add_model(self, name: str, layers: List[LayerDef],
+                  **engine_kw) -> ColdEngine:
+        if name in self.engines:
+            raise ValueError(f"model {name!r} already added")
+        engine_kw.setdefault("pool", self.pool)
+        if self.profile_db is not None:
+            engine_kw.setdefault("profile_db", self.profile_db)
+        eng = ColdEngine(layers, self.root / name, **engine_kw)
+        self.engines[name] = eng
+        return eng
+
+    def decide(self, name: str, x_example, **kw) -> Dict[str, Any]:
+        kw.setdefault("n_little", self.n_little)
+        return self.engines[name].decide(x_example, **kw)
+
+    # -- serving ------------------------------------------------------------
+    def cold_start(self, name: str, x, *, n_little: Optional[int] = None,
+                   graph_hook=None) -> ColdStart:
+        """Admit one cold-start request (blocks while ``max_concurrent_preps``
+        jobs are in their prep phase) and submit its task graph."""
+        eng = self.engines[name]
+        assert eng.plan is not None, f"decide() first for model {name!r}"
+        self._admission.acquire()
+        with self._lock:
+            self.stats["admitted"] += 1
+            self.stats["cold_starts"] += 1
+            self.stats["active_preps"] += 1
+            self.stats["max_active_preps"] = max(
+                self.stats["max_active_preps"], self.stats["active_preps"])
+        try:
+            job = eng.submit_cold(x, n_little=n_little or self.n_little,
+                                  graph_hook=graph_hook)
+        except BaseException:
+            self._release_prep_slot()
+            raise
+        job.job.add_preps_callback(lambda _job: self._release_prep_slot())
+        return ColdStart(self, name, job)
+
+    def _release_prep_slot(self):
+        with self._lock:
+            self.stats["active_preps"] -= 1
+        self._admission.release()
+
+    def run(self, name: str, x) -> RunResult:
+        """Serve one request: resident weights (warm) if available, else a
+        full admitted cold start."""
+        warm = self.warm_run(name, x)
+        if warm is not None:
+            return warm
+        return self.cold_start(name, x).result()
+
+    def warm_run(self, name: str, x) -> Optional[RunResult]:
+        """Execute against resident (post-cold) weights; None if evicted or
+        never cold-started."""
+        with self._lock:
+            weights = self._resident_weights.get(name)
+            if weights is None:
+                return None
+            self._resident.move_to_end(name)    # LRU touch
+        eng = self.engines[name]
+        rt = eng._runtime(n_little=self.n_little, work_stealing=True)
+        t0 = time.perf_counter()
+        y = jax.numpy.asarray(x)
+        for lname in rt.order:
+            y = rt.jitted[lname](weights.get(lname, {}), y)
+        jax.block_until_ready(y)
+        return RunResult(output=y, total_s=time.perf_counter() - t0,
+                         weights=weights)
+
+    # -- residency / eviction ----------------------------------------------
+    def _register_resident(self, name: str, res: RunResult):
+        nbytes = _weights_nbytes(res.weights)
+        if not nbytes:
+            return
+        evict: List[str] = []
+        with self._lock:
+            self._resident_weights[name] = res.weights
+            self._resident.pop(name, None)
+            self._resident[name] = nbytes
+            if self.memory_budget_bytes is not None:
+                while (sum(self._resident.values()) > self.memory_budget_bytes
+                       and len(self._resident) > 1):
+                    victim, _ = self._resident.popitem(last=False)
+                    self._resident_weights.pop(victim, None)
+                    evict.append(victim)
+                    self.stats["evictions"] += 1
+        # dropping the dict refs is the eviction; XLA frees the buffers
+
+    def resident_models(self) -> List[str]:
+        with self._lock:
+            return list(self._resident)
+
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(self._resident.values())
+
+    def evict(self, name: str) -> bool:
+        with self._lock:
+            self._resident_weights.pop(name, None)
+            return self._resident.pop(name, None) is not None

@@ -71,6 +71,10 @@ class BatchedServer:
         self.pos = np.zeros(max_batch, np.int64)        # per-slot position
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
+        # completed since the last drain; run_until_drained hands the list
+        # to the caller (a long-running server must not accumulate every
+        # request it ever served)
+        self.finished: List[Request] = []
         self._decode = jax.jit(
             lambda p, s, b, pos: T.decode_step(p, s, b, pos, cfg))
         self._t0 = time.perf_counter()
@@ -134,13 +138,17 @@ class BatchedServer:
             req.out_tokens.append(self._pick(req, logits[s, 0]))
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.done_s = time.perf_counter() - self._t0
+                self.finished.append(req)
                 self.slot_req[s] = None
         return len(live)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        done: List[Request] = []
+        """Tick until queue and slots are empty; returns every request
+        finished since the last drain (in completion order) and clears the
+        buffer — ownership passes to the caller."""
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
             self.step()
-        return done
+        out, self.finished = self.finished, []
+        return out

@@ -68,6 +68,37 @@ def test_crc32c_incremental_and_ndarray():
     assert crc32c(a) == crc32c(a.tobytes())
 
 
+def test_crc32c_fast_path_cross_checks_software():
+    """Satellite (PR 5): when a C-backed CRC-32C is importable it serves
+    the hot path, and it must agree bit-for-bit with the numpy software
+    implementation on every size class and on incremental chaining."""
+    from repro.checkpoint.integrity import _crc32c_software, crc32c_backend
+
+    backend = crc32c_backend()
+    rng = np.random.default_rng(7)
+    for n in (0, 1, 63, 1023, 1024, 4096, 100_000):
+        a = rng.integers(0, 256, n, dtype=np.uint8)
+        assert crc32c(a) == _crc32c_software(a), (backend, n)
+        mid = n // 2
+        assert crc32c(a[mid:], crc32c(a[:mid])) == _crc32c_software(a), \
+            (backend, n)
+    # non-contiguous / non-uint8 arrays route through the same view logic
+    f = rng.standard_normal((64, 8)).astype(np.float32)
+    assert crc32c(f) == _crc32c_software(f)
+
+
+def test_crc32c_software_env_override(monkeypatch):
+    """REPRO_CRC32C=software must force the fallback (fleet debugging +
+    the cross-check harness depend on it)."""
+    import repro.checkpoint.integrity as integ
+
+    monkeypatch.setenv("REPRO_CRC32C", "software")
+    monkeypatch.setattr(integ, "_FAST", None)
+    monkeypatch.setattr(integ, "_FAST_PROBED", False)
+    assert integ.crc32c_backend() == "numpy-software"
+    assert integ.crc32c(b"123456789") == 0xE3069283
+
+
 # ---------------------------------------------------------------------------
 # crash injection
 # ---------------------------------------------------------------------------
