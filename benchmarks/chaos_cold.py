@@ -1,0 +1,217 @@
+"""Chaos benchmark — deterministic fault injection against the cold path.
+
+Three arms, each a gate the fault-domain layer must hold (docs/robustness.md):
+
+  1. **transient chaos** — a seeded ``FaultInjector`` fails ~5% of store
+     reads and prep tasks. The cold start must complete with a
+     BIT-IDENTICAL output, bounded per-task retries, no leaked admission
+     slot or worker thread, and bounded latency inflation.
+  2. **cache bit-rot** — a cached extent is corrupted on disk. The lazy
+     CRC audit must catch it at read time and the runtime must recompute
+     the transform from raw (journaling a ``cache_recompute`` repair) —
+     never serve garbage, never fail the request.
+  3. **faulting kernel** — the chosen kernel raises at execute. The
+     per-(kernel, shape-class) circuit breaker must demote the layer to
+     the reference kernel, journal the repair, and mark the plan for
+     re-decide — the request completes (allclose, not bit-identical: a
+     different kernel ran).
+
+``--smoke`` hard-fails on any gate; CI runs it on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from benchmarks.common import csv_line
+except ImportError:  # invoked as `python benchmarks/chaos_cold.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import csv_line
+from repro.executor.pool import CorePool
+from repro.executor.server import ColdServer
+from repro.faults import FaultInjector
+from repro.models.cnn import build_cnn
+
+CHAOS_RATES = {"store.read_raw": 0.08, "store.read_cached": 0.08,
+               "task.read": 0.05, "task.stage": 0.05}
+
+
+def _gate(ok: bool, msg: str, failures: list):
+    print(("PASS " if ok else "FAIL ") + msg)
+    if not ok:
+        failures.append(msg)
+
+
+def _setup(root: str):
+    pool = CorePool(n_little=2, n_big=1, name="chaos")
+    server = ColdServer(root, pool=pool, n_little=2)
+    layers, x = build_cnn("squeezenet", image=16, width=0.25)
+    eng = server.add_model("net", layers, store_fmt="super")
+    server.decide("net", x, n_little=2)
+    return server, eng, x
+
+
+def run_transient_chaos(server, eng, x, failures: list):
+    """Arm 1: seeded transient faults on reads and prep tasks."""
+    pool, store = server.pool, eng.store
+    t0 = time.perf_counter()
+    y0 = np.asarray(server.cold_start("net", x).result().output)
+    base_s = time.perf_counter() - t0
+
+    # seed picked so the deterministic hash injects faults on read, stage
+    # AND store sites for this model/job (the decision is a pure function
+    # of (seed, site, key, call#) — thread interleaving cannot change it)
+    inj = FaultInjector(seed=11, rates=CHAOS_RATES, max_faults_per_key=2)
+    store.fault_injector = inj
+    pool.fault_injector = inj
+    threads_before = pool.threads_created
+    try:
+        t0 = time.perf_counter()
+        cs = server.cold_start("net", x)
+        y1 = np.asarray(cs.result().output)
+        chaos_s = time.perf_counter() - t0
+    finally:
+        store.fault_injector = None
+        pool.fault_injector = None
+
+    job = cs.job.job
+    _gate(inj.n_injected >= 1,
+          f"chaos armed: {inj.n_injected} fault(s) injected", failures)
+    _gate(job.retries >= 1 and job.retries <= 3 * inj.n_injected + 3,
+          f"bounded pool retries absorbed the faults "
+          f"(retries={job.retries}, injected={inj.n_injected})", failures)
+    _gate(np.array_equal(y0, y1),
+          "output BIT-IDENTICAL under injected transient faults", failures)
+    _gate(server.stats["active_preps"] == 0,
+          "no admission slot leaked", failures)
+    _gate(pool.threads_created == threads_before,
+          "no worker threads leaked or replaced", failures)
+    _gate(pool.health["jobs_failed"] == 0,
+          "no job failed under chaos", failures)
+    _gate(chaos_s <= 10 * base_s + 0.5,
+          f"latency inflation bounded ({base_s:.3f}s -> {chaos_s:.3f}s)",
+          failures)
+    print(csv_line("chaos/baseline_cold_s", base_s))
+    print(csv_line("chaos/chaos_cold_s", chaos_s))
+    print(f"chaos/injected_faults,{inj.n_injected},")
+    print(f"chaos/pool_retries,{job.retries},")
+    return y0
+
+
+def run_cache_bitrot(server, eng, x, y0, failures: list):
+    """Arm 2: corrupt a cached extent on disk mid-fleet."""
+    from repro.checkpoint.superbundle import read_super_header
+    from repro.core.scheduler import Choice
+
+    store = eng.store
+    # force one weighted layer onto the cached-read path so the ladder has
+    # a cache extent to lose
+    idx, ldef = next((i, l) for i, l in enumerate(eng.layers)
+                     if l.spec.weight_shapes)
+    name = ldef.spec.name
+    kern = eng._kernel_by_name(ldef.spec, eng.plan.choices[idx].kernel)
+    eng.plan.choices[idx] = Choice(kern.name, True)
+    store.write_cached(name, kern.name,
+                       kern.transform(store.read_raw(name), ldef.spec))
+    store._super(flush_all=True)
+    store.close()  # release the mmap before mutating the file underneath
+    eng._runtimes.clear()  # runtimes are plan-bound
+
+    ent = read_super_header(store._super_path)[
+        "layers"][name]["cache"][kern.name][0]
+    with open(store._super_path, "r+b") as f:
+        f.seek(ent["offset"] + ent["nbytes"] // 2)
+        b = f.read(1)
+        f.seek(ent["offset"] + ent["nbytes"] // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+    y2 = np.asarray(server.cold_start("net", x).result().output)
+    repairs = eng.repairs.of_kind("cache_recompute")
+    _gate(np.array_equal(y0, y2),
+          "output BIT-IDENTICAL with a corrupt cache extent", failures)
+    _gate(any(r.get("layer") == name for r in repairs),
+          f"cache_recompute repair journaled ({len(repairs)} event(s))",
+          failures)
+    _gate(any(d.get("layer") == name and "checksum" in d.get("reason", "")
+              for d in store.dropped_entries),
+          "corrupt entry dropped with a checksum reason", failures)
+    print(f"chaos/cache_recompute_repairs,{len(repairs)},")
+
+
+def run_kernel_fault(server, eng, x, y0, failures: list):
+    """Arm 3: the chosen kernel faults at execute -> breaker demotion."""
+    # a layer whose op type has an alternative kernel to demote to
+    target = next(l.spec.name for l in eng.layers
+                  if l.spec.weight_shapes
+                  and len(eng._kernels_for(l.spec)) > 1)
+    inj = FaultInjector(seed=7, rates={"kernel.execute": 1.0},
+                        keys={"kernel.execute": {target}},
+                        max_faults_per_key=10 ** 6)
+    eng.fault_injector = inj
+    eng._runtimes.clear()  # rebind runtimes to pick the injector up
+    try:
+        y3 = np.asarray(server.cold_start("net", x).result().output)
+    finally:
+        eng.fault_injector = None
+        eng._runtimes.clear()
+
+    demotions = eng.repairs.of_kind("kernel_demoted")
+    open_keys = eng.breaker.open_keys()
+    _gate(np.allclose(y0, y3, rtol=1e-4, atol=1e-5),
+          "request completed on the reference kernel (allclose)", failures)
+    _gate(any(r.get("layer") == target for r in demotions),
+          f"kernel_demoted repair journaled ({len(demotions)} event(s))",
+          failures)
+    _gate(len(open_keys) >= 1,
+          f"circuit breaker open for the sick kernel ({open_keys})",
+          failures)
+    _gate((eng.store.root / "replan_pending.json").exists(),
+          "plan marked for re-decide", failures)
+
+    # breaker already open: the next request short-circuits to the
+    # reference kernel without waiting for another fault
+    y4 = np.asarray(server.cold_start("net", x).result().output)
+    _gate(np.allclose(y0, y4, rtol=1e-4, atol=1e-5),
+          "breaker short-circuit serves the follow-up request", failures)
+    # and a fresh decide() excludes the demoted kernel + clears the marker
+    stats = server.decide("net", x, n_little=2)
+    _gate(target in stats.get("replan_cleared", []),
+          "re-decide clears the replan marker", failures)
+    demoted = {k.split(":", 1)[0] for k in open_keys}
+    _gate(stats["choices"][target][0] not in demoted,
+          f"re-decide avoids the demoted kernel(s) {sorted(demoted)} "
+          f"(picked {stats['choices'][target][0]})", failures)
+    print(f"chaos/kernel_demotions,{len(demotions)},")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="hard-fail on any gate (CI)")
+    args = ap.parse_args(argv)
+    failures: list = []
+    root = tempfile.mkdtemp(prefix="nnv12_chaos_")
+    server, eng, x = _setup(root)
+    try:
+        y0 = run_transient_chaos(server, eng, x, failures)
+        run_cache_bitrot(server, eng, x, y0, failures)
+        run_kernel_fault(server, eng, x, y0, failures)
+    finally:
+        leak = server.pool.shutdown()
+        _gate(not leak["leaked"], "pool shutdown leaked no workers",
+              failures)
+    if failures:
+        print(f"\n{len(failures)} gate(s) FAILED")
+        return 1 if args.smoke else 0
+    print("\nall chaos gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,8 +48,10 @@ from repro.checkpoint.integrity import (  # noqa: F401  (re-exported helpers)
     atomic_write_text, crc32c, fsync_dir, fsync_file,
 )
 from repro.checkpoint.superbundle import (
-    SuperBundle, drop_cache_entry, set_cache_entry, write_superbundle,
+    SuperBundle, drop_cache_entry, set_cache_entries, set_cache_entry,  # noqa: F401
+    write_superbundle,
 )
+from repro.faults import classify
 
 
 def _safe(name: str) -> str:
@@ -101,6 +103,9 @@ class LayerStore:
         self.verify = verify  # super-bundle checksum audit mode
         self.open_count = 0  # file opens performed by reads
         self.cache_write_count = 0  # write_cached calls (cache materializations)
+        # chaos hook: a repro.faults.FaultInjector with "store.read_raw" /
+        # "store.read_cached" sites armed (None = no injection)
+        self.fault_injector = None
         # cache entries dropped by journal recovery / checksum verification
         # ({"layer", "kernel", "reason"}; fmt="super" only)
         self.dropped_entries: List[dict] = []
@@ -148,10 +153,22 @@ class LayerStore:
     def _super_flush(self):
         """Merge all buffered writes/drops into the container in ONE atomic
         rewrite (write_raw during model install is buffered so an N-layer
-        install costs one rewrite, not N)."""
+        install costs one rewrite, not N). When the only pending work is
+        cache-entry writes against an existing container — the decide()
+        refresh pattern — they commit as ONE batched intent-journal
+        transaction instead (one fsync pair however many entries)."""
         if not self._super_dirty():
             return
         self._quiesce_maintenance()
+        if (not self._pending_raw and not self._pending_drop
+                and self._super_path.exists()):
+            self._invalidate_reader()
+            res = set_cache_entries(self._super_path,
+                                    dict(self._pending_cache),
+                                    verify=self.verify)
+            self.dropped_entries += res["dropped"]
+            self._pending_cache.clear()
+            return
         raw: Dict[str, Dict[str, np.ndarray]] = {}
         cache: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
         order: List[str] = []
@@ -337,13 +354,23 @@ class LayerStore:
         self._write(self._raw_path(layer), weights)
 
     def read_raw(self, layer: str, *, mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
-        if self.fmt == "super":
-            sb = self._super()
-            if sb is None:
-                return {}
-            use = self.mmap if mmap is None else mmap
-            return sb.read_raw(layer, materialize=not use)
-        return self._read(self._raw_path(layer), mmap)
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fault("store.read_raw", layer)
+        try:
+            if self.fmt == "super":
+                sb = self._super()
+                if sb is None:
+                    return {}
+                use = self.mmap if mmap is None else mmap
+                return sb.read_raw(layer, materialize=not use)
+            return self._read(self._raw_path(layer), mmap)
+        except OSError as e:
+            # transient-errno I/O errors become typed retryable ReadFaults;
+            # real conditions (ENOENT, EACCES, ...) pass through unchanged
+            f = classify(e, site="store.read_raw", layer=layer)
+            if f is e:
+                raise
+            raise f from e
 
     def raw_bytes(self, layer: str) -> int:
         if self.fmt == "super":
@@ -360,39 +387,69 @@ class LayerStore:
         if self.fmt == "super":
             self._quiesce_maintenance()
             self._pending_drop.discard((layer, kernel))
-            if (not self._super_dirty() and self._super_path.exists()
-                    and self.has_cached(layer, kernel)):
-                # replacing an entry already in the container: go through
-                # the in-place / rewrite-on-grow path directly
-                self._invalidate_reader()
-                set_cache_entry(self._super_path, layer, kernel, weights)
-            else:
-                # first materialization: buffer, so N layers' cache entries
-                # land in ONE rewrite at the next full flush instead of N
-                self._pending_cache[(layer, kernel)] = {
-                    k: np.asarray(v) for k, v in weights.items()}
-                if layer not in self._order:
-                    self._order.append(layer)
+            # buffer first materializations AND replacements alike: at the
+            # next flush point, N replacements commit as ONE batched
+            # journal transaction (one fsync pair) and N first-time
+            # entries land in ONE rewrite — never N commits
+            self._pending_cache[(layer, kernel)] = {
+                k: np.asarray(v) for k, v in weights.items()}
+            if layer not in self._order:
+                self._order.append(layer)
             return
         self._write(self._cache_path(layer, kernel), weights)
 
     def read_cached(self, layer: str, kernel: str, *,
                     mmap: Optional[bool] = None) -> Dict[str, np.ndarray]:
-        if self.fmt == "super":
-            if (layer, kernel) in self._pending_drop:
-                return {}
-            use = self.mmap if mmap is None else mmap
-            pend = self._pending_cache.get((layer, kernel))
-            if pend is not None:
-                # serve the buffered entry without forcing a flush (copies
-                # under mmap=False so callers may mutate freely)
-                return ({k: np.array(v) for k, v in pend.items()}
-                        if not use else dict(pend))
-            sb = self._super()
-            if sb is None:
-                return {}
-            return sb.read_cached(layer, kernel, materialize=not use)
-        return self._read(self._cache_path(layer, kernel), mmap)
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fault("store.read_cached", layer)
+        try:
+            if self.fmt == "super":
+                if (layer, kernel) in self._pending_drop:
+                    return {}
+                use = self.mmap if mmap is None else mmap
+                pend = self._pending_cache.get((layer, kernel))
+                if pend is not None:
+                    # serve the buffered entry without forcing a flush (copies
+                    # under mmap=False so callers may mutate freely)
+                    return ({k: np.array(v) for k, v in pend.items()}
+                            if not use else dict(pend))
+                sb = self._super()
+                if sb is None:
+                    return {}
+                return sb.read_cached(layer, kernel, materialize=not use)
+            return self._read(self._cache_path(layer, kernel), mmap)
+        except OSError as e:
+            f = classify(e, site="store.read_cached", layer=layer)
+            if f is e:
+                raise
+            raise f from e
+
+    def audit_cached(self, layer: str, kernel: str) -> bool:
+        """Run the lazy CRC audit on a cache entry NOW, covering the
+        zero-copy mmap path (which normally serves views unverified). The
+        runtime's degradation ladder calls this before trusting a cached
+        entry mid-run: a failing extent is dropped from the header
+        (reported via ``dropped_entries``) and the caller transparently
+        recomputes the transform from raw. Returns False exactly when the
+        entry just failed its audit; True when it verifies, is still
+        buffered, is absent (``read_cached`` returns ``{}`` anyway), or
+        auditing is off (non-super format / ``verify="never"``)."""
+        if self.fmt != "super" or self.verify == "never":
+            return True
+        if (layer, kernel) in self._pending_cache:
+            return True
+        if (layer, kernel) in self._pending_drop:
+            return False
+        sb = self._super()
+        if sb is None or not sb.has_cached(layer, kernel):
+            return True
+        ok = sb._verify_cached(layer, kernel)
+        if not ok:
+            # harvest the drop report immediately so the repair event can
+            # cite the reason without waiting for the reader to reopen
+            self.dropped_entries += sb.dropped[self._reader_seen:]
+            self._reader_seen = len(sb.dropped)
+        return ok
 
     def has_cached(self, layer: str, kernel: str) -> bool:
         if self.fmt == "super":

@@ -87,6 +87,7 @@ from repro.checkpoint.bundle import (
     atomic_write, read_bundle,
 )
 from repro.checkpoint.integrity import crc32c, fsync_file
+from repro.faults import IntegrityFault
 
 MAGIC = b"NNVS"
 VERSION = 3
@@ -117,8 +118,10 @@ class InjectedCrash(BaseException):
     in-process cleanup path swallows it."""
 
 
-class IntegrityError(ValueError):
-    """A checksum-protected region failed verification."""
+class IntegrityError(IntegrityFault, ValueError):
+    """A checksum-protected region failed verification. Part of the typed
+    fault taxonomy (a PermanentFault — retrying re-reads the same bad
+    bytes); still a ValueError for pre-taxonomy callers."""
 
 
 def _hook(phase: str, **ctx):
@@ -364,13 +367,27 @@ def _extent_ok(f, e: dict) -> bool:
     return crc32c(f.read(e["nbytes"])) == e["crc32c"]
 
 
+def _record_entries(rec: dict) -> List[dict]:
+    """Normalize a BEGIN record to its per-entry view. Batched records carry
+    ``entries=[{"layer","kernel","slots"}, ...]``; legacy single-entry
+    records carry top-level ``layer``/``kernel``/``slots``."""
+    ents = rec.get("entries")
+    if ents:
+        return ents
+    return [{"layer": rec["layer"], "kernel": rec["kernel"],
+             "slots": rec.get("slots", [])}]
+
+
 def _resolve_txn(path: Path, rec: dict) -> List[dict]:
     """Resolve one un-committed BEGIN record against the container: roll
-    forward if the new data fully landed, keep the old entry if nothing was
-    written, otherwise drop the torn entry from the header. Returns reports
-    of dropped entries."""
+    forward if the new data fully landed, keep old entries where nothing was
+    overwritten, otherwise drop exactly the torn entries from the header.
+    A record may cover several cache entries (one batched transaction);
+    resolution is per-entry. Returns reports of dropped entries."""
     hdr_new = base64.b64decode(rec["header"]["b64"])
-    layer, kernel = rec["layer"], rec["kernel"]
+    entries = _record_entries(rec)
+    all_slots = [s for ent in entries for s in ent["slots"]]
+    dropped: List[dict] = []
     with open(path, "r+b") as f:
         cur_hdr: Optional[dict] = None
         cur_raw: Optional[bytes] = None
@@ -381,29 +398,41 @@ def _resolve_txn(path: Path, rec: dict) -> List[dict]:
         if (cur_hdr is not None
                 and int(cur_hdr.get("generation", 0)) != rec.get("gen")):
             return []  # stale record from a superseded container: ignore
-        if all(_extent_ok(f, s) for s in rec["slots"]):
+        if all(_extent_ok(f, s) for s in all_slots):
             # data fully applied — roll forward (restore the new header if
             # the crash tore it or hit before it was written)
             if cur_raw != hdr_new:
                 _write_header_inplace(f, hdr_new)
             return []
         if cur_raw is not None and cur_raw != hdr_new:
-            # old header still current — if the old entry's bytes verify,
-            # nothing was overwritten: pure rollback, old entry survives
-            ents = (cur_hdr["layers"].get(layer, {})
-                    .get("cache", {}).get(kernel))
-            if ents is not None and all(
-                    "crc32c" in e and _extent_ok(f, e) for e in ents):
-                return []
+            # old header still current — every entry whose old bytes verify
+            # was not overwritten and survives under the old header; entries
+            # whose old extents fail were partially clobbered and are torn
             base = cur_hdr
+            torn = []
+            for ent in entries:
+                old = (cur_hdr["layers"].get(ent["layer"], {})
+                       .get("cache", {}).get(ent["kernel"]))
+                if old is not None and all(
+                        "crc32c" in e and _extent_ok(f, e) for e in old):
+                    continue
+                torn.append(ent)
+            if not torn:
+                return []  # pure rollback, all old entries intact
         else:
-            # header already (or restored to) the new one; entry is torn
+            # header already (or restored to) the new one: keep entries
+            # whose NEW slots fully landed; the rest are torn
             base = json.loads(hdr_new.decode())
-        base["layers"].get(layer, {}).get("cache", {}).pop(kernel, None)
+            torn = [ent for ent in entries
+                    if not all(_extent_ok(f, s) for s in ent["slots"])]
+        for ent in torn:
+            base["layers"].get(ent["layer"], {}).get("cache", {}).pop(
+                ent["kernel"], None)
+            dropped.append({"layer": ent["layer"], "kernel": ent["kernel"],
+                            "reason": "torn in-place commit rolled back"})
         _write_header_inplace(
             f, json.dumps(base, separators=(",", ":")).encode())
-    return [{"layer": layer, "kernel": kernel,
-             "reason": "torn in-place commit rolled back"}]
+    return dropped
 
 
 def recover_journal(path: Path) -> List[dict]:
@@ -684,23 +713,27 @@ def _first_data_offset(sb: SuperBundle) -> int:
     return min(offs) if offs else sb.file_size()
 
 
-def _commit_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
+def _commit_inplace(path: Path, sb: SuperBundle, entries: List[dict],
                     hdr_bytes: bytes,
                     slots: List[Tuple[int, bytes]]) -> None:
     """The crash-atomic in-place commit: journal the intent (slot checksums
     + full new header), fsync it AHEAD of any container write, then write
     payload slots and the new header, fsync, and mark the transaction
-    committed. Any tear in between is resolved by ``recover_journal`` at
-    the next open."""
+    committed — ONE fsync pair however many cache entries the transaction
+    covers. ``entries`` is ``[{"layer","kernel","slots":[meta]}, ...]``;
+    any tear in between is resolved per-entry by ``recover_journal`` at the
+    next open."""
     jp = journal_path(path)
     begin = {
         "txn": _next_txn(jp), "gen": sb.generation,
-        "layer": layer, "kernel": kernel,
-        "slots": [{"offset": off, "nbytes": len(b), "crc32c": crc32c(b)}
-                  for off, b in slots],
+        "entries": entries,
+        "slots": [s for ent in entries for s in ent["slots"]],
         "header": {"len": len(hdr_bytes), "crc32c": crc32c(hdr_bytes),
                    "b64": base64.b64encode(hdr_bytes).decode()},
     }
+    if len(entries) == 1:  # legacy single-entry shape, kept for introspection
+        begin["layer"] = entries[0]["layer"]
+        begin["kernel"] = entries[0]["kernel"]
     _hook("journal", record=begin, journal=jp)
     _journal_append(jp, b"B", begin, sync=True)
     _hook("journal-synced", record=begin, journal=jp)
@@ -718,28 +751,77 @@ def _commit_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
         _journal_reset(jp)
 
 
-def _try_inplace(path: Path, sb: SuperBundle, layer: str, kernel: str,
-                 entries_new: List[dict], arrs: List[np.ndarray]) -> bool:
+def _try_inplace_many(
+        path: Path, sb: SuperBundle,
+        payloads: Dict[Tuple[str, str],
+                       Tuple[List[dict], List[np.ndarray]]]) -> bool:
+    """Attempt ONE journaled in-place transaction replacing every entry in
+    ``payloads``. All-or-nothing: if any entry's tensors changed names, grew
+    past its slot, or the combined header outgrows the header region, no
+    bytes are touched and the caller falls back to a rewrite."""
     if sb.version < 3:
         return False  # pre-checksum container: upgrade via full rewrite
-    old = sb._layers[layer]["cache"][kernel]
-    if [e["name"] for e in old] != [e["name"] for e in entries_new]:
-        return False
     slots = _slot_sizes(sb)
-    if any(en["nbytes"] > slots[id(eo)] for eo, en in zip(old, entries_new)):
-        return False
     # candidate header on a deep copy — sb.header must stay untouched unless
     # the in-place path actually commits
     hdr = json.loads(json.dumps(sb.header))
-    for eo, en in zip(hdr["layers"][layer]["cache"][kernel], entries_new):
-        eo.update(dtype=en["dtype"], shape=en["shape"], nbytes=en["nbytes"],
-                  crc32c=en["crc32c"])
+    rec_entries: List[dict] = []
+    flat: List[Tuple[int, bytes]] = []
+    for (layer, kernel), (entries_new, arrs) in payloads.items():
+        old = sb._layers[layer]["cache"][kernel]
+        if [e["name"] for e in old] != [e["name"] for e in entries_new]:
+            return False
+        if any(en["nbytes"] > slots[id(eo)]
+               for eo, en in zip(old, entries_new)):
+            return False
+        for eo, en in zip(hdr["layers"][layer]["cache"][kernel], entries_new):
+            eo.update(dtype=en["dtype"], shape=en["shape"],
+                      nbytes=en["nbytes"], crc32c=en["crc32c"])
+        metas = []
+        for eo, a in zip(old, arrs):
+            b = a.tobytes()
+            flat.append((eo["offset"], b))
+            metas.append({"offset": eo["offset"], "nbytes": len(b),
+                          "crc32c": crc32c(b)})
+        rec_entries.append({"layer": layer, "kernel": kernel, "slots": metas})
     hdr_bytes = json.dumps(hdr, separators=(",", ":")).encode()
     if _V3_FIXED + len(hdr_bytes) > _first_data_offset(sb):
         return False
-    payloads = [(eo["offset"], a.tobytes()) for eo, a in zip(old, arrs)]
-    _commit_inplace(path, sb, layer, kernel, hdr_bytes, payloads)
+    _commit_inplace(path, sb, rec_entries, hdr_bytes, flat)
     return True
+
+
+def set_cache_entries(
+        path: Path,
+        updates: Dict[Tuple[str, str], LayerWeights], *,
+        verify: str = "lazy") -> dict:
+    """Commit several cache-entry writes as ONE transaction. When every
+    entry already exists and fits its slot (the decide() refresh pattern),
+    this is a single journaled in-place commit — one journal fsync + one
+    container fsync, instead of a pair per entry. Anything that grows or is
+    new falls back to one atomic rewrite covering all updates. Returns
+    ``{"mode": "inplace"|"rewrite", "dropped": [...]}`` (recovery/audit
+    drop reports from opening the container)."""
+    path = Path(path)
+    payloads = {(l, k): _payload(w) for (l, k), w in updates.items()}
+    with SuperBundle(path, verify=verify) as sb:
+        dropped = list(sb.dropped)
+        if (payloads
+                and all(sb.has_cached(l, k) for l, k in payloads)
+                and _try_inplace_many(path, sb, payloads)):
+            return {"mode": "inplace", "dropped": dropped}
+        raw, cache = _load_all(sb)
+        dropped = list(sb.dropped)  # _load_all may audit-drop more
+        order = list(sb.order)
+        for (layer, kernel), (entries_new, arrs) in payloads.items():
+            if layer not in order:
+                order.append(layer)
+                raw.setdefault(layer, {})
+            cache.setdefault(layer, {})[kernel] = dict(
+                zip([e["name"] for e in entries_new], arrs))
+        write_superbundle(path, raw, cache, order=order,
+                          generation=sb.generation + 1)
+    return {"mode": "rewrite", "dropped": dropped}
 
 
 def set_cache_entry(path: Path, layer: str, kernel: str,
@@ -748,22 +830,7 @@ def set_cache_entry(path: Path, layer: str, kernel: str,
     (crash-atomic, journaled) when the payload fits the existing slots and
     the header region; else rewrite-on-grow (atomic tmp+rename). Returns
     ``"inplace"`` or ``"rewrite"``."""
-    path = Path(path)
-    entries_new, arrs = _payload(weights)
-    with SuperBundle(path) as sb:
-        if (sb.has_cached(layer, kernel)
-                and _try_inplace(path, sb, layer, kernel, entries_new, arrs)):
-            return "inplace"
-        raw, cache = _load_all(sb)
-        order = list(sb.order)
-        if layer not in order:
-            order.append(layer)
-            raw.setdefault(layer, {})
-        cache.setdefault(layer, {})[kernel] = dict(
-            zip([e["name"] for e in entries_new], arrs))
-        write_superbundle(path, raw, cache, order=order,
-                          generation=sb.generation + 1)
-    return "rewrite"
+    return set_cache_entries(path, {(layer, kernel): weights})["mode"]
 
 
 def drop_cache_entry(path: Path, layer: str, kernel: str) -> bool:
@@ -780,7 +847,10 @@ def drop_cache_entry(path: Path, layer: str, kernel: str) -> bool:
             hdr["layers"][layer]["cache"].pop(kernel)
             hdr_bytes = json.dumps(hdr, separators=(",", ":")).encode()
             if _V3_FIXED + len(hdr_bytes) <= _first_data_offset(sb):
-                _commit_inplace(path, sb, layer, kernel, hdr_bytes, [])
+                _commit_inplace(
+                    path, sb,
+                    [{"layer": layer, "kernel": kernel, "slots": []}],
+                    hdr_bytes, [])
                 return True
         raw, cache = _load_all(sb)
         del cache[layer][kernel]

@@ -45,6 +45,9 @@ from repro.core.scheduler import (
     Choice, LayerCandidates, Plan, pareto_filter, schedule,
 )
 from repro.core.staging import stage_weights
+from repro.faults import (
+    CircuitBreaker, Fault, KernelFault, PlanFault, RepairLog,
+)
 
 
 @dataclass
@@ -91,6 +94,13 @@ class ColdEngine:
             self.profile_db = ProfileDB(Path(profile_db))
         self.profiler_factory: Callable[..., Profiler] = Profiler
         self.pool = pool                  # shared persistent CorePool
+        # -- fault domain (docs/robustness.md) --------------------------
+        self.fault_injector = None            # chaos: threaded into runtimes
+        self.retry_policy = None              # per-task retry (None=default)
+        self.task_deadline_s: Optional[float] = None  # pool watchdog
+        self.repairs = RepairLog(self.store.root / "repairs.jsonl")
+        self.breaker = CircuitBreaker(self.store.root / "breakers.json")
+        self._fallback_jitted: Dict[Tuple[str, str], Tuple[Callable, Dict]] = {}
         self._runtimes: Dict[tuple, PipelineRuntime] = {}
         self.plan: Optional[Plan] = None
         self.profiles: Dict[str, List[OpProfile]] = {}
@@ -175,12 +185,99 @@ class ColdEngine:
         keep_keys = {id(c[0]) for c in filtered}
         return [o for o in options if id(o[0]) in keep_keys]
 
+    # -- degradation ladder: the plan itself --------------------------------
+    def fallback_plan(self, n_little: int = 3) -> Plan:
+        """Default heuristic plan — the ladder's last rung when no decision
+        exists and none can be recovered. Reference kernel (registry head)
+        per layer, no weight cache, first weighted layer prepped on the big
+        cores, the rest round-robin across the little lanes. Correct by
+        construction; only the latency is degraded."""
+        choices = [Choice(self._kernels_for(l.spec)[0].name, False)
+                   for l in self.layers]
+        weighted = [i for i, l in enumerate(self.layers)
+                    if l.spec.weight_shapes]
+        if n_little <= 0:
+            return Plan(choices, weighted, [], 0.0)
+        rest = weighted[1:]
+        return Plan(choices, weighted[:1],
+                    [rest[j::n_little] for j in range(n_little)], 0.0)
+
+    def ensure_plan(self, x_example: np.ndarray, *,
+                    n_little: int = 3) -> Plan:
+        """A usable plan, never an exception: in-memory plan → ``plan.json``
+        reload (validated) → :meth:`fallback_plan`. A cold request on a
+        fresh process must not fail because the offline decision is missing
+        or corrupt — it proceeds degraded and journals the repair."""
+        if self._input_example is None:
+            self._input_example = x_example
+        if self.plan is not None:
+            return self.plan
+        plan_path = self.store.root / "plan.json"
+        try:
+            d = json.loads(plan_path.read_text())["plan"]
+            plan = Plan.from_dict(d)
+            if len(plan.choices) != len(self.layers):
+                raise PlanFault(
+                    f"plan.json has {len(plan.choices)} choices for "
+                    f"{len(self.layers)} layers")
+            for l, c in zip(self.layers, plan.choices):
+                if all(k.name != c.kernel
+                       for k in self._kernels_for(l.spec)):
+                    raise PlanFault(
+                        f"plan.json picks unknown kernel {c.kernel!r} "
+                        f"for layer {l.spec.name!r}", layer=l.spec.name,
+                        kernel=c.kernel)
+            self.plan = plan
+            return plan
+        except FileNotFoundError:
+            pass
+        except Exception as e:
+            self.repairs.record("plan_fallback",
+                                reason=f"plan.json unusable: {e}")
+        self.plan = self.fallback_plan(n_little)
+        return self.plan
+
     def decide(
         self, x_example: np.ndarray, *, n_little: int = 3,
         force_reprofile: bool = False, calibrate_interference: bool = True,
     ) -> Dict[str, Any]:
-        """Offline decision stage. Returns stats incl. generation time."""
+        """Offline decision stage. Returns stats incl. generation time.
+
+        Degradation ladder: a typed ``Fault`` raised while profiling or
+        scheduling (sick store, poisoned ProfileDB, ...) demotes the
+        decision to :meth:`fallback_plan` instead of failing — the stats
+        carry ``degraded=True`` and the repair is journaled."""
+        if force_reprofile:
+            # operator lever: a forced re-decide also gives kernels demoted
+            # by the runtime circuit breakers another chance
+            self.breaker.reset()
+            self.breaker.save()
         t0 = time.perf_counter()
+        try:
+            return self._decide_core(
+                x_example, n_little=n_little,
+                force_reprofile=force_reprofile,
+                calibrate_interference=calibrate_interference, t0=t0)
+        except Fault as e:
+            self.repairs.record("decide_degraded", reason=repr(e))
+            self.plan = self.fallback_plan(n_little)
+            self._runtimes.clear()
+            stats = {"degraded": True, "error": str(e) or repr(e),
+                     "plan_generation_s": time.perf_counter() - t0,
+                     "est_makespan_s": 0.0}
+            try:
+                atomic_write_text(
+                    self.store.root / "plan.json", json.dumps(
+                        {"plan": self.plan.to_dict(), "stats": stats},
+                        indent=1))
+            except OSError:
+                pass
+            return stats
+
+    def _decide_core(
+        self, x_example: np.ndarray, *, n_little: int,
+        force_reprofile: bool, calibrate_interference: bool, t0: float,
+    ) -> Dict[str, Any]:
         self._input_example = x_example
         layer_inputs = self._layer_inputs = self._trace_shapes(x_example)
         # §3.2: co-running preps share disk bandwidth — measure the real
@@ -235,14 +332,30 @@ class ColdEngine:
         # the Pareto filter) collapse to one per shape class
         self.profiles = {}
         cands: List[Optional[LayerCandidates]] = [None] * len(self.layers)
+        open_keys = set(self.breaker.open_keys())
         for sc, idxs in groups.items():
             plist = sc_profiles[sc]
-            options = self._options_from_profiles(
-                plist, self.layers[idxs[0]].spec)
+            spec0 = self.layers[idxs[0]].spec
+            options = self._options_from_profiles(plist, spec0)
             for i in idxs:
                 name = self.layers[i].spec.name
                 self.profiles[name] = [replace(p, layer=name) for p in plist]
-                cands[i] = LayerCandidates(layer=name, options=options)
+                opts = options
+                if open_keys:
+                    # kernels demoted at runtime (open circuit breaker for
+                    # this shape class or layer) are excluded from re-decide
+                    # until force_reprofile resets them; the registry-head
+                    # reference kernel is always kept as a floor
+                    healthy = [
+                        p.kernel for p in plist
+                        if CircuitBreaker.key(p.kernel, sc) not in open_keys
+                        and CircuitBreaker.key(p.kernel, name) not in open_keys
+                    ] or [plist[0].kernel]
+                    opts = [o for o in options if o[0].kernel in healthy]
+                    if not opts:  # every healthy kernel was Pareto-dominated
+                        opts = self._options_from_profiles(
+                            [p for p in plist if p.kernel in healthy], spec0)
+                cands[i] = LayerCandidates(layer=name, options=opts)
 
         self.plan = schedule(cands, n_little)
         self._runtimes.clear()     # cached runtimes are plan-bound
@@ -280,6 +393,15 @@ class ColdEngine:
         # post-materialization maintenance: dropped/superseded cache entries
         # leave dead extents in a super-bundle container; compact them out
         maintenance = self.store.maintain()
+        # a fresh decision answers any pending re-decide requests left by
+        # runtime kernel demotions (_fallback_execute)
+        rp = self.store.root / "replan_pending.json"
+        replan_cleared: List[str] = []
+        try:
+            replan_cleared = sorted(json.loads(rp.read_text()))
+            rp.unlink()
+        except (FileNotFoundError, json.JSONDecodeError, OSError, ValueError):
+            pass
         gen_s = time.perf_counter() - t0
         # read-vs-stage split of the chosen plan's big-core prep costs
         split = {"read_s": 0.0, "transform_s": 0.0, "stage_s": 0.0}
@@ -303,6 +425,7 @@ class ColdEngine:
             "profile_calls": profile_calls,
             "profile_db_hits": db_hits,
             "store_maintenance": maintenance,
+            "replan_cleared": replan_cleared,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
                         for l, c in zip(self.layers, self.plan.choices)},
         }
@@ -326,6 +449,66 @@ class ColdEngine:
             h.update(k.encode())
             h.update(np.ascontiguousarray(l.weights[k]).tobytes())
         return h.hexdigest()[:20]
+
+    # -- degradation ladder: the execute rung -------------------------------
+    def _mark_replan(self, layer: str) -> None:
+        """Persist a re-decide request: the next ``decide()`` on this store
+        sees and clears it (``stats["replan_cleared"]``)."""
+        rp = self.store.root / "replan_pending.json"
+        try:
+            pending = set(json.loads(rp.read_text()))
+        except (FileNotFoundError, json.JSONDecodeError, ValueError):
+            pending = set()
+        pending.add(layer)
+        try:
+            atomic_write_text(rp, json.dumps(sorted(pending)))
+        except OSError:
+            pass  # advisory marker; losing it only delays the re-decide
+
+    def _fallback_execute(self, layer: str, x, exc,
+                          chosen: Optional[str] = None):
+        """A layer's chosen kernel faulted at execute (or its circuit
+        breaker is already open, ``exc is None``): demote the
+        (kernel, shape-class) pair, journal the repair, mark the plan for
+        re-decide, and finish the request on the reference kernel. The
+        request degrades in latency, never in correctness — the reference
+        kernel is the zero-transform registry head the oracles pin down."""
+        l = next(ld for ld in self.layers if ld.spec.name == layer)
+        if chosen is None and self.plan is not None:
+            idx = next(i for i, ld in enumerate(self.layers)
+                       if ld.spec.name == layer)
+            chosen = self.plan.choices[idx].kernel
+        sc = self._sc_by_layer.get(layer) or layer
+        if exc is not None and chosen is not None:
+            key = CircuitBreaker.key(chosen, sc)
+            self.breaker.record_failure(key, reason=repr(exc))
+            self.breaker.save()
+            self.repairs.record("kernel_demoted", layer=layer, kernel=chosen,
+                                shape_class=sc, reason=repr(exc))
+            self._mark_replan(layer)
+        ref = next(
+            (k for k in self._kernels_for(l.spec)
+             if k.name != chosen
+             and self.breaker.allow(CircuitBreaker.key(k.name, sc))),
+            None)
+        if ref is None:
+            raise KernelFault(
+                f"no healthy fallback kernel for layer {layer!r}",
+                layer=layer, kernel=chosen) from exc
+        ent = self._fallback_jitted.get((layer, ref.name))
+        if ent is None:
+            w = {}
+            if l.spec.weight_shapes:
+                w = stage_weights(
+                    ref.transform(self.store.read_raw(layer), l.spec))
+            fn = jax.jit(
+                (lambda kern, spec: lambda w_, x_:
+                 kern.execute(w_, x_, spec))(ref, l.spec))
+            ent = self._fallback_jitted[(layer, ref.name)] = (fn, w)
+        fn, w = ent
+        y = fn(w, jnp.asarray(x))
+        jax.block_until_ready(y)
+        return y
 
     # ------------------------------------------------------------------
     def _avatar_dtype(self, name: str):
@@ -406,10 +589,28 @@ class ColdEngine:
                     prep_costs[l.spec.name] = (
                         p.read_raw_s * rd
                         + p.transform_s * cm.little_transform + stage)
+        # fault-domain plumbing: the runtime's execute tasks consult the
+        # circuit breakers and demote to _fallback_execute; repairs and
+        # injected chaos flow through the engine-owned log/injector
+        choice_by_layer = {l.spec.name: c
+                           for l, c in zip(self.layers, plan.choices)}
+
+        def exec_allowed(name: str) -> bool:
+            sc = self._sc_by_layer.get(name) or name
+            return self.breaker.allow(
+                CircuitBreaker.key(choice_by_layer[name].kernel, sc))
+
+        def fallback_exec(name: str, x, exc):
+            return self._fallback_execute(
+                name, x, exc, chosen=choice_by_layer[name].kernel)
+
         return PipelineRuntime(
             self.specs, kernels, use_cache, self.store, jitted,
             n_little=n_little, work_stealing=work_stealing,
             prep_costs=prep_costs or None, pool=self.pool,
+            retry=self.retry_policy, deadline_s=self.task_deadline_s,
+            fault_injector=self.fault_injector, repair_log=self.repairs,
+            fallback_exec=fallback_exec, exec_allowed=exec_allowed,
         )
 
     def _runtime(self, *, n_little: int, work_stealing: bool) -> PipelineRuntime:

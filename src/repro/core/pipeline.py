@@ -35,6 +35,7 @@ from repro.core.scheduler import Plan
 from repro.core.staging import stage_weights
 from repro.executor.graph import OpTrace, compile_plan
 from repro.executor.pool import CorePool, Job, get_core_pool
+from repro.faults import TransientFault
 
 __all__ = ["OpTrace", "PipelineJob", "PipelineRuntime", "RunResult"]
 
@@ -93,6 +94,12 @@ class PipelineRuntime:
         prefetch: bool = True,
         prep_costs: Optional[Dict[str, float]] = None,
         pool: Optional[CorePool] = None,
+        retry=None,                       # faults.RetryPolicy for the job
+        deadline_s: Optional[float] = None,  # per-task watchdog deadline
+        fault_injector=None,              # faults.FaultInjector (chaos)
+        repair_log=None,                  # faults.RepairLog (ladder events)
+        fallback_exec: Optional[Callable] = None,  # (layer, x, exc) -> y
+        exec_allowed: Optional[Callable[[str], bool]] = None,  # breaker
     ):
         self.specs = {s.name: s for s in specs}
         self.order = [s.name for s in specs]
@@ -105,6 +112,12 @@ class PipelineRuntime:
         self.stage_in_prep = stage_in_prep
         self.prefetch = prefetch
         self.pool = pool
+        self.retry = retry
+        self.deadline_s = deadline_s
+        self.fault_injector = fault_injector
+        self.repair_log = repair_log
+        self.fallback_exec = fallback_exec
+        self.exec_allowed = exec_allowed
         # per-layer prep-cost estimates drive donor selection when stealing;
         # weight bytes are the fallback proxy when no profile is plumbed in
         self.prep_costs = prep_costs or {
@@ -170,16 +183,28 @@ class PipelineRuntime:
                 weights_out[layer] = w
 
     def _read_op(self, layer: str):
-        """The 'read' task body: cached entry (§3.1.2) or raw weights."""
+        """The 'read' task body: cached entry (§3.1.2) or raw weights.
+
+        Degradation ladder, first rung: the cache entry is CRC-audited
+        before it is trusted (``LayerStore.audit_cached`` covers the
+        zero-copy mmap path that lazy verification normally skips). A
+        failing or missing entry is transparently recomputed from raw and
+        the repair is journaled — the request never fails over bit-rot."""
         spec = self.specs[layer]
         kern = self.kernels[layer]
         if self.use_cache.get(layer, False):
-            w = self.store.read_cached(layer, kern.name)
+            audit = getattr(self.store, "audit_cached", None)
+            ok = audit(layer, kern.name) if audit is not None else True
+            w = self.store.read_cached(layer, kern.name) if ok else {}
             if not w:
-                # the entry was dropped under the plan's feet (journal
-                # recovery / checksum audit tore it out): fall back to
-                # raw + transform rather than executing with no weights
+                # dropped under the plan's feet (journal recovery, checksum
+                # audit, bit-rot): recompute rather than execute weightless
                 w = kern.transform(self.store.read_raw(layer), spec)
+                if self.repair_log is not None:
+                    self.repair_log.record(
+                        "cache_recompute", layer=layer, kernel=kern.name,
+                        reason=("failed CRC audit" if not ok
+                                else "entry missing/dropped"))
             return w
         return self.store.read_raw(layer)
 
@@ -213,20 +238,29 @@ class PipelineRuntime:
             deferred_stage_affinity="any" if self.prefetch else "big",
         )
 
+        # task fns are VALUE-IDEMPOTENT: every stage writes its own
+        # (name, kind) key instead of mutating/popping a shared one, so a
+        # retried attempt — or a watchdog-zombie that finishes late —
+        # recomputes the identical value into the same slot and cannot
+        # corrupt the chain. (Intermediates are held until the job ends;
+        # the pool-retry safety is worth the transient footprint.)
         def read_fn(name):
             def fn():
-                pending[name] = self._read_op(name)
+                pending[(name, "read")] = self._read_op(name)
             return fn
 
         def transform_fn(name):
             def fn():
-                pending[name] = self.kernels[name].transform(
-                    pending[name], self.specs[name])
+                pending[(name, "xf")] = self.kernels[name].transform(
+                    pending[(name, "read")], self.specs[name])
             return fn
 
         def stage_fn(name):
             def fn():
-                w = self._device_put(pending.pop(name))
+                src = pending.get((name, "xf"), None)
+                if src is None:
+                    src = pending[(name, "read")]
+                w = self._device_put(src)
                 with lock:
                     weights[name] = w
             return fn
@@ -235,8 +269,29 @@ class PipelineRuntime:
             def fn():
                 with lock:
                     w = weights.get(name, {})
-                y = self.jitted[name](w, state["y"])
-                jax.block_until_ready(y)
+                x_in = state["y"]
+                if (self.fallback_exec is not None
+                        and self.exec_allowed is not None
+                        and not self.exec_allowed(name)):
+                    # circuit breaker already open for this layer's kernel:
+                    # demote straight to the reference path
+                    y = self.fallback_exec(name, x_in, None)
+                else:
+                    try:
+                        inj = self.fault_injector
+                        if inj is not None:
+                            inj.maybe_fault("kernel.execute", name)
+                        y = self.jitted[name](w, x_in)
+                        jax.block_until_ready(y)
+                    except TransientFault:
+                        raise  # pool-level bounded retry (state["y"] is
+                        #        untouched, so the retry reads the same x)
+                    except Exception as e:
+                        if self.fallback_exec is None:
+                            raise
+                        # degradation ladder: a faulting kernel demotes to
+                        # the reference kernel instead of failing the run
+                        y = self.fallback_exec(name, x_in, e)
                 state["y"] = y
             return fn
 
@@ -249,7 +304,8 @@ class PipelineRuntime:
 
         job = self._get_pool().submit(
             graph, name=f"cold:{self.order[0]}..{self.order[-1]}",
-            allow_steal=self.work_stealing, t0=t0)
+            allow_steal=self.work_stealing, t0=t0,
+            retry=self.retry, deadline_s=self.deadline_s)
         return PipelineJob(job, state, weights)
 
     def run(self, x, plan: Plan) -> RunResult:

@@ -52,6 +52,8 @@ class Task:
     cost: float = 0.0               # est. seconds; chain head carries the
                                     # layer's full prep cost (steal metric)
     fn: Optional[Callable[[], None]] = None
+    deadline_s: Optional[float] = None  # per-task deadline; None = inherit
+                                        # the job-level default (pool watchdog)
 
 
 class TaskGraph:

@@ -19,6 +19,30 @@ Scheduling rules (mirroring the plan simulator, §3.3):
     whoever idles first — an idle little core prefetch-stages layer i+1
     while the big core executes layer i, without a dedicated stager thread.
 
+Fault domain (``repro.faults``):
+
+  * a task raising a ``TransientFault`` is retried in place — bounded by the
+    job's ``RetryPolicy``, with exponential backoff enforced through a
+    per-task ``not_before`` eligibility time (workers skip ineligible tasks
+    and sleep until the earliest backoff expires). Any other exception still
+    fails the job exactly as before.
+  * tasks may carry a deadline (per-task ``Task.deadline_s`` or the job-wide
+    ``deadline_s=`` given at submit). A watchdog thread (started lazily the
+    first time a deadline is used — the deadline-free steady path never pays
+    for it) expires overdue tasks: the stuck worker is retired (quarantined)
+    and replaced by a fresh thread for the same lane, the lane's unstarted
+    prep chains are rescheduled onto healthy lanes via the steal rule's cost
+    metric, and the expired *prep* task is retried on a healthy lane (an
+    overdue *execute* task fails the job with ``DeadlineExceeded`` — the
+    activation chain is stateful, so re-running it behind a live zombie
+    could corrupt ``state["y"]``). Per-task epoch counters make the zombie's
+    eventual completion harmlessly discardable.
+  * ``shutdown()`` detects workers that never joined (a hung task leaks the
+    thread), counts them in ``health["workers_lost"]`` and reports (or
+    raises, with ``raise_on_leak=True``) a typed ``WorkerLost``.
+  * ``health`` counts retries/expiries/quarantines/leaks pool-wide;
+    ``Job.retries`` and ``Job.fault_events`` record the per-run story.
+
 A failing task cancels the rest of its job (other jobs are untouched) and
 re-raises from ``Job.result()``/``wait()``.
 """
@@ -31,6 +55,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.scheduler import pick_steal_donor
 from repro.executor.graph import OpTrace, PREP_KINDS, TaskGraph
+from repro.faults import (
+    DEFAULT_RETRY, DeadlineExceeded, JobTimeout, RetryPolicy, TransientFault,
+    WorkerLost, classify,
+)
 
 _PENDING, _READY, _RUNNING, _DONE, _CANCELLED = range(5)
 
@@ -42,16 +70,21 @@ class Job:
     """One submitted task graph: per-run traces, completion event, error."""
 
     def __init__(self, graph: TaskGraph, name: str, t0: Optional[float],
-                 allow_steal: bool):
+                 allow_steal: bool, retry: Optional[RetryPolicy] = None,
+                 deadline_s: Optional[float] = None):
         self.seq = next(_JOB_SEQ)
         self.graph = graph
         self.name = name
         self.t0 = time.perf_counter() if t0 is None else t0
         self.allow_steal = allow_steal
+        self.retry = retry if retry is not None else DEFAULT_RETRY
+        self.deadline_s = deadline_s  # job-wide default task deadline
         self.traces: List[OpTrace] = []
         self.total_s: float = 0.0
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
+        self.retries = 0                      # transient-fault retries used
+        self.fault_events: List[dict] = []    # per-run fault/retry story
         self.on_preps_done: List[Callable[["Job"], None]] = []
         self._cb_lock = threading.Lock()
 
@@ -63,6 +96,11 @@ class Job:
             for d in t.deps:
                 self._children[d].append(t.tid)
         self._done_count = 0
+        self._attempts = [0] * n            # transient retries consumed
+        self._epoch = [0] * n               # bumped when the watchdog expires
+        #                                     a running attempt: the zombie's
+        #                                     eventual completion is discarded
+        self._not_before: Dict[int, float] = {}  # backoff eligibility times
         self._prep_left = sum(
             1 for t in graph.tasks if t.kind in PREP_KINDS)
         # prep-free jobs have no worker to fire preps-done: treat the prep
@@ -103,12 +141,18 @@ class Job:
         else:
             self._ready_little.setdefault(t.lane, []).append(tid)
 
-    def _lane_remaining(self) -> Dict[int, List[str]]:
-        """Per lane: layers whose prep chain has not started (stealable)."""
+    def _lane_remaining(self, now: Optional[float] = None
+                        ) -> Dict[int, List[str]]:
+        """Per lane: layers whose prep chain has not started (stealable).
+        With ``now`` given, chains whose head is still in retry backoff are
+        excluded (not worth stealing yet)."""
         out: Dict[int, List[str]] = {}
         for lane, layers in self._lane_layers.items():
             ls = [n for n in layers
-                  if self._state[self._layer_chain[n][0]] == _READY]
+                  if self._state[self._layer_chain[n][0]] == _READY
+                  and (now is None
+                       or self._not_before.get(
+                           self._layer_chain[n][0], 0.0) <= now)]
             if ls:
                 out[lane] = ls
         return out
@@ -130,13 +174,34 @@ class Job:
                 break
         self._lane_layers.setdefault(to_lane, []).append(layer)
 
+    def _requeue_from_lane(self, lane: int) -> int:
+        """Move every unstarted prep chain off ``lane`` onto the least-
+        loaded other lane — the steal rule's remaining-cost metric, inverted
+        (send work to the emptiest healthy lane). Called by the pool
+        watchdog when a lane's worker is quarantined."""
+        if self.n_lanes <= 1 or lane >= self.n_lanes:
+            return 0
+        moved = 0
+        while True:
+            remaining = self._lane_remaining()
+            layers = remaining.get(lane)
+            if not layers:
+                return moved
+            loads = {j: sum(self._chain_cost(n)
+                            for n in remaining.get(j, []))
+                     for j in range(self.n_lanes) if j != lane}
+            dest = min(loads, key=lambda j: (loads[j], j))
+            self._move_layer(layers[0], dest)
+            moved += 1
+
     def _finished(self) -> bool:
         return self._done_count >= len(self.graph.tasks)
 
     # -- public -------------------------------------------------------------
     def wait(self, timeout: Optional[float] = None) -> "Job":
         if not self.done.wait(timeout):
-            raise TimeoutError(f"job {self.name!r} still running")
+            raise JobTimeout(
+                f"job {self.name!r} still running after {timeout}s wait")
         if self.error is not None:
             raise self.error
         return self
@@ -162,16 +227,23 @@ class Job:
             cb(self)
 
 
-def _pop_min(lst: List[int]) -> int:
-    k = min(range(len(lst)), key=lst.__getitem__)
-    return lst.pop(k)
+def _pop_eligible(job: Job, lst: List[int], now: float) -> Optional[int]:
+    """Pop the lowest eligible tid (backoff ``not_before`` respected)."""
+    best = None
+    for i, tid in enumerate(lst):
+        if job._not_before.get(tid, 0.0) > now:
+            continue
+        if best is None or tid < lst[best]:
+            best = i
+    return lst.pop(best) if best is not None else None
 
 
 class CorePool:
     """Persistent big.LITTLE worker pools executing task graphs."""
 
     def __init__(self, n_big: int = 1, n_little: int = 3,
-                 name: str = "corepool"):
+                 name: str = "corepool", *,
+                 watchdog_interval_s: float = 0.02):
         self.name = name
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -180,6 +252,19 @@ class CorePool:
         self.threads_created = 0
         self.jobs_completed = 0
         self.steals = 0
+        # fault-domain state
+        self.health: Dict[str, int] = {
+            "task_retries": 0, "deadline_expired": 0,
+            "lanes_quarantined": 0, "workers_replaced": 0,
+            "workers_lost": 0, "jobs_failed": 0,
+        }
+        self.fault_injector = None  # repro.faults.FaultInjector ("task.*")
+        self.watchdog_interval_s = watchdog_interval_s
+        self.leak_report: Optional[dict] = None
+        self._running: Dict[Tuple[int, int], dict] = {}  # (id(job), tid)
+        self._retired: set = set()          # quarantined worker threads
+        self._zombies: List[threading.Thread] = []
+        self._watchdog: Optional[threading.Thread] = None
         self._big: List[threading.Thread] = []
         self._little: List[threading.Thread] = []
         self.ensure(n_little=n_little, n_big=n_big)
@@ -219,7 +304,9 @@ class CorePool:
         return self
 
     def submit(self, graph: TaskGraph, *, name: str = "job",
-               allow_steal: bool = True, t0: Optional[float] = None) -> Job:
+               allow_steal: bool = True, t0: Optional[float] = None,
+               retry: Optional[RetryPolicy] = None,
+               deadline_s: Optional[float] = None) -> Job:
         graph.validate()
         for t in graph.tasks:
             if t.fn is None:
@@ -227,10 +314,17 @@ class CorePool:
                     f"task {t.layer}/{t.kind} has no bound fn")
         lanes = graph.lanes()
         self.ensure(n_little=(max(lanes) + 1 if lanes else None), n_big=1)
-        job = Job(graph, name, t0, allow_steal)
+        job = Job(graph, name, t0, allow_steal, retry, deadline_s)
+        needs_watchdog = (deadline_s is not None or any(
+            t.deadline_s is not None for t in graph.tasks))
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("pool is shut down")
+            if needs_watchdog and self._watchdog is None:
+                self._watchdog = threading.Thread(
+                    target=self._watchdog_loop, daemon=True,
+                    name=f"{self.name}-watchdog")
+                self._watchdog.start()
             if job._finished():          # empty graph
                 job.total_s = time.perf_counter() - job.t0
                 job.done.set()
@@ -240,19 +334,44 @@ class CorePool:
                 self._cv.notify_all()
         return job
 
-    def shutdown(self):
+    def shutdown(self, timeout: float = 5.0, *,
+                 raise_on_leak: bool = False) -> dict:
+        """Stop the pool. A worker stuck inside a hung task cannot join:
+        such leaks are DETECTED (``health["workers_lost"]``, the returned
+        report) instead of silently ignored, and raised as a typed
+        ``WorkerLost`` when ``raise_on_leak`` is set."""
         with self._cv:
             self._shutdown = True
             self._cv.notify_all()
-        for th in self._big + self._little:
-            th.join(timeout=5.0)
+        threads = list(self._big) + list(self._little) + list(self._zombies)
+        if self._watchdog is not None:
+            threads.append(self._watchdog)
+        deadline = time.monotonic() + timeout
+        leaked: List[str] = []
+        for th in threads:
+            th.join(timeout=max(deadline - time.monotonic(), 0.0))
+            if th.is_alive():
+                leaked.append(th.name)
+        report: dict = {"leaked": leaked}
+        if leaked:
+            self.health["workers_lost"] += len(leaked)
+            report["error"] = WorkerLost(
+                f"{len(leaked)} pool worker(s) leaked at shutdown (hung "
+                f"task?): {', '.join(leaked)}")
+            self.leak_report = report
+            if raise_on_leak:
+                raise report["error"]
+        return report
 
     # -- worker internals ----------------------------------------------------
-    def _next_for_little(self, j: int) -> Optional[Tuple[Job, int]]:
+    def _next_for_little(self, j: int, now: float
+                         ) -> Optional[Tuple[Job, int]]:
         for job in self._jobs:
             rl = job._ready_little.get(j)
             if rl:
-                return job, _pop_min(rl)
+                tid = _pop_eligible(job, rl, now)
+                if tid is not None:
+                    return job, tid
         # steal: donor lane (any job that allows it) with most remaining
         # prep cost; take its tail layer's whole chain
         best: Optional[Tuple[Job, int, List[str]]] = None
@@ -260,7 +379,7 @@ class CorePool:
         for job in self._jobs:
             if not job.allow_steal or j >= job.n_lanes:
                 continue
-            remaining = job._lane_remaining()
+            remaining = job._lane_remaining(now)
             remaining.pop(j, None)      # own lane is empty (checked above)
             donor = pick_steal_donor(remaining, job._chain_cost)
             if donor is None:
@@ -274,89 +393,176 @@ class CorePool:
             self.steals += 1
             rl = job._ready_little.get(j)
             if rl:
-                return job, _pop_min(rl)
+                tid = _pop_eligible(job, rl, now)
+                if tid is not None:
+                    return job, tid
         for job in self._jobs:
             if job._ready_any:
-                return job, _pop_min(job._ready_any)
+                tid = _pop_eligible(job, job._ready_any, now)
+                if tid is not None:
+                    return job, tid
         return None
 
-    def _next_for_big(self) -> Optional[Tuple[Job, int]]:
+    def _next_for_big(self, now: float) -> Optional[Tuple[Job, int]]:
         for job in self._jobs:
             if job._ready_big:
-                return job, _pop_min(job._ready_big)
+                tid = _pop_eligible(job, job._ready_big, now)
+                if tid is not None:
+                    return job, tid
         for job in self._jobs:
             if job._ready_any:
-                return job, _pop_min(job._ready_any)
+                tid = _pop_eligible(job, job._ready_any, now)
+                if tid is not None:
+                    return job, tid
         return None
 
+    def _wait_timeout(self, now: float) -> Optional[float]:
+        """Sleep bound for an idle worker: until the earliest backoff-
+        deferred READY task becomes eligible (None = no deferred work)."""
+        nxt: Optional[float] = None
+        for job in self._jobs:
+            for tid, nb in job._not_before.items():
+                if nb > now and job._state[tid] == _READY:
+                    if nxt is None or nb < nxt:
+                        nxt = nb
+        return None if nxt is None else max(nxt - now, 1e-4)
+
     def _worker_loop(self, core: str,
-                     pick: Callable[[], Optional[Tuple[Job, int]]]):
+                     pick: Callable[[float], Optional[Tuple[Job, int]]],
+                     wkind: str, widx: int):
+        me = threading.current_thread()
         while True:
             with self._cv:
                 item = None
                 while item is None:
-                    if self._shutdown:
+                    if self._shutdown or me in self._retired:
                         return
-                    item = pick()
+                    now = time.perf_counter()
+                    item = pick(now)
                     if item is None:
-                        self._cv.wait()
+                        self._cv.wait(self._wait_timeout(now))
                 job, tid = item
                 job._state[tid] = _RUNNING
-            self._run(job, tid, core)
+            self._run(job, tid, core, wkind, widx)
 
     def _big_loop(self, i: int):
-        self._worker_loop("big" if i == 0 else f"big{i}", self._next_for_big)
+        self._worker_loop("big" if i == 0 else f"big{i}",
+                          self._next_for_big, "big", i)
 
     def _little_loop(self, j: int):
         self._worker_loop(f"little{j}",
-                          lambda: self._next_for_little(j))
+                          lambda now: self._next_for_little(j, now),
+                          "little", j)
 
-    def _run(self, job: Job, tid: int, core: str):
+    def _fail_job_locked(self, job: Job, tid: int,
+                         err: BaseException) -> Tuple[bool, bool]:
+        """Under the pool lock: record ``err``, cancel the job's remaining
+        tasks, and account task ``tid`` as done. Returns
+        ``(fire_preps, finished)`` for the caller to act on OUTSIDE the
+        lock."""
+        task = job.graph.tasks[tid]
+        job.error = err
+        self.health["jobs_failed"] += 1
+        job.fault_events.append({
+            "layer": task.layer, "kind": task.kind, "action": "fail",
+            "error": type(err).__name__})
+        fire_preps = False
+        for t2 in job.graph.tasks:
+            if job._state[t2.tid] in (_PENDING, _READY):
+                job._state[t2.tid] = _CANCELLED
+                job._done_count += 1
+        job._ready_big.clear()
+        job._ready_any.clear()
+        job._ready_little.clear()
+        # a failed job must still release its admission slot:
+        # cancelled preps will never complete, so fire preps-done now
+        if not job._preps_fired:
+            job._preps_fired = True
+            fire_preps = True
+        job._state[tid] = _DONE
+        job._done_count += 1
+        if task.kind in PREP_KINDS:
+            job._prep_left -= 1
+        finished = job._finished()
+        if finished:
+            self._jobs.remove(job)
+            self.jobs_completed += 1
+            job.total_s = time.perf_counter() - job.t0
+        return fire_preps, finished
+
+    def _run(self, job: Job, tid: int, core: str, wkind: str, widx: int):
         task = job.graph.tasks[tid]
         err: Optional[BaseException] = None
+        with self._cv:
+            epoch = job._epoch[tid]
+            deadline = (task.deadline_s if task.deadline_s is not None
+                        else job.deadline_s)
+            self._running[(id(job), tid)] = {
+                "job": job, "tid": tid, "epoch": epoch,
+                "t0": time.perf_counter(), "deadline": deadline,
+                "thread": threading.current_thread(),
+                "wkind": wkind, "widx": widx}
         ts = time.perf_counter()
         try:
+            inj = self.fault_injector
+            if inj is not None:
+                inj.maybe_fault(f"task.{task.kind}",
+                                f"{job.name}:{task.layer}")
             task.fn()
         except BaseException as e:      # noqa: BLE001 — forwarded to caller
-            err = e
+            err = classify(e, site=f"task.{task.kind}", layer=task.layer)
         te = time.perf_counter()
-        if err is None:
-            job.traces.append(OpTrace(task.layer, task.kind, core,
-                                      ts - job.t0, te - job.t0))
         fire_preps = False
+        finished = False
         with self._cv:
+            self._running.pop((id(job), tid), None)
+            if job._epoch[tid] != epoch or job._state[tid] != _RUNNING:
+                # the watchdog expired this attempt while it ran: the retry
+                # owns the completion accounting now — discard ours (task
+                # fns are value-idempotent, so a zombie that got this far
+                # did no harm)
+                self._cv.notify_all()
+                return
+            if (err is not None and isinstance(err, TransientFault)
+                    and not self._shutdown
+                    and job._attempts[tid] + 1 < job.retry.max_attempts):
+                # bounded in-place retry with backoff: the task goes back to
+                # its ready queue, eligible only after the backoff expires
+                job._attempts[tid] += 1
+                job.retries += 1
+                self.health["task_retries"] += 1
+                job._not_before[tid] = (
+                    time.perf_counter()
+                    + job.retry.delay(job._attempts[tid]))
+                job.fault_events.append({
+                    "layer": task.layer, "kind": task.kind,
+                    "action": "retry", "attempt": job._attempts[tid],
+                    "error": type(err).__name__})
+                job._mark_ready(tid)
+                self._cv.notify_all()
+                return
             if err is not None:
-                job.error = err
-                for t2 in job.graph.tasks:
-                    if job._state[t2.tid] in (_PENDING, _READY):
-                        job._state[t2.tid] = _CANCELLED
-                        job._done_count += 1
-                job._ready_big.clear()
-                job._ready_any.clear()
-                job._ready_little.clear()
-                # a failed job must still release its admission slot:
-                # cancelled preps will never complete, so fire preps-done now
-                if not job._preps_fired:
-                    job._preps_fired = True
-                    fire_preps = True
-            job._state[tid] = _DONE
-            job._done_count += 1
-            if task.kind in PREP_KINDS:
-                job._prep_left -= 1
-                if job._prep_left == 0 and not job._preps_fired:
-                    job._preps_fired = True
-                    fire_preps = True
-            if err is None:
+                fire_preps, finished = self._fail_job_locked(job, tid, err)
+            else:
+                job.traces.append(OpTrace(task.layer, task.kind, core,
+                                          ts - job.t0, te - job.t0))
+                job._state[tid] = _DONE
+                job._done_count += 1
+                if task.kind in PREP_KINDS:
+                    job._prep_left -= 1
+                    if job._prep_left == 0 and not job._preps_fired:
+                        job._preps_fired = True
+                        fire_preps = True
                 for child in job._children[tid]:
                     job._pending[child] -= 1
                     if job._pending[child] == 0 \
                             and job._state[child] == _PENDING:
                         job._mark_ready(child)
-            finished = job._finished()
-            if finished:
-                self._jobs.remove(job)
-                self.jobs_completed += 1
-                job.total_s = te - job.t0
+                finished = job._finished()
+                if finished:
+                    self._jobs.remove(job)
+                    self.jobs_completed += 1
+                    job.total_s = te - job.t0
             self._cv.notify_all()
         # callbacks and the done event fire outside the pool lock so they
         # may submit follow-up work without deadlocking
@@ -364,6 +570,99 @@ class CorePool:
             job._fire_preps_callbacks()
         if finished:
             job.done.set()
+
+    # -- watchdog ------------------------------------------------------------
+    def _watchdog_loop(self):
+        while True:
+            actions: List[Tuple[Job, bool, bool]] = []
+            with self._cv:
+                self._cv.wait(timeout=self.watchdog_interval_s)
+                if self._shutdown:
+                    return
+                now = time.perf_counter()
+                for key in list(self._running):
+                    rec = self._running.get(key)
+                    if (rec is None or rec["deadline"] is None
+                            or now - rec["t0"] <= rec["deadline"]):
+                        continue
+                    self._expire_locked(rec, now, actions)
+                if actions:
+                    self._cv.notify_all()
+            for job, fire_preps, finished in actions:
+                if fire_preps:
+                    job._fire_preps_callbacks()
+                if finished:
+                    job.done.set()
+
+    def _expire_locked(self, rec: dict, now: float,
+                       actions: List[Tuple[Job, bool, bool]]):
+        """Under the pool lock: expire one overdue running task. Quarantines
+        the stuck worker (retire + like-for-like replacement so the lane
+        keeps draining), reschedules the lane's unstarted chains onto
+        healthy lanes, and retries the expired prep task there — or fails
+        the job for an overdue execute task / exhausted retry budget."""
+        job, tid = rec["job"], rec["tid"]
+        self._running.pop((id(job), tid), None)
+        if job._epoch[tid] != rec["epoch"] or job._state[tid] != _RUNNING:
+            return  # that attempt already resolved itself
+        task = job.graph.tasks[tid]
+        self.health["deadline_expired"] += 1
+        # any completion the stuck thread eventually reports is a zombie now
+        job._epoch[tid] += 1
+        th = rec["thread"]
+        if th is not None and th.is_alive() and th not in self._retired:
+            self._retired.add(th)
+            self._zombies.append(th)
+            self.health["workers_replaced"] += 1
+            widx, wkind = rec["widx"], rec["wkind"]
+            if wkind == "little":
+                self.health["lanes_quarantined"] += 1
+                nth = threading.Thread(
+                    target=self._little_loop, args=(widx,), daemon=True,
+                    name=f"{self.name}-little{widx}r")
+                self._little[widx] = nth
+            else:
+                nth = threading.Thread(
+                    target=self._big_loop, args=(widx,), daemon=True,
+                    name=f"{self.name}-big{widx}r")
+                self._big[widx] = nth
+            self.threads_created += 1
+            nth.start()
+            if wkind == "little":
+                # reschedule the quarantined lane's unstarted chains onto
+                # healthy lanes (inverted steal rule: emptiest lane wins)
+                for j2 in self._jobs:
+                    j2._requeue_from_lane(widx)
+        if (task.kind in PREP_KINDS
+                and job._attempts[tid] + 1 < job.retry.max_attempts):
+            job._attempts[tid] += 1
+            job.retries += 1
+            self.health["task_retries"] += 1
+            job.fault_events.append({
+                "layer": task.layer, "kind": task.kind,
+                "action": "deadline-retry", "attempt": job._attempts[tid],
+                "error": "DeadlineExceeded"})
+            if task.affinity == "little" and job.n_lanes > 1:
+                # retarget the whole chain off the stuck lane; siblings are
+                # still PENDING (they depend on this task), so updating
+                # their lane tag is enough
+                dest = (task.lane + 1) % job.n_lanes
+                for tid2 in job._layer_chain.get(task.layer, []):
+                    job.graph.tasks[tid2].lane = dest
+                for lane, layers in job._lane_layers.items():
+                    if task.layer in layers and lane != dest:
+                        layers.remove(task.layer)
+                        break
+                if task.layer not in job._lane_layers.setdefault(dest, []):
+                    job._lane_layers[dest].append(task.layer)
+            job._not_before[tid] = now  # retry immediately, elsewhere
+            job._mark_ready(tid)
+        else:
+            err = DeadlineExceeded(
+                f"task {task.layer}/{task.kind} exceeded its "
+                f"{rec['deadline']:.3f}s deadline", layer=task.layer)
+            fire_preps, finished = self._fail_job_locked(job, tid, err)
+            actions.append((job, fire_preps, finished))
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ from repro.core.engine import ColdEngine, LayerDef
 from repro.core.pipeline import PipelineJob, RunResult
 from repro.core.profiler import ProfileDB
 from repro.executor.pool import CorePool, get_core_pool
+from repro.faults import ModelQuarantined
 
 
 def _weights_nbytes(weights: Optional[Dict[str, Any]]) -> int:
@@ -58,8 +59,15 @@ class ColdStart:
         return self.job.done()
 
     def result(self, timeout: Optional[float] = None) -> RunResult:
-        res = self.job.result(timeout)
+        try:
+            res = self.job.result(timeout)
+        except TimeoutError:
+            raise  # caller-side wait timeout, not a model failure
+        except Exception as e:
+            self.server._record_model_failure(self.model, e)
+            raise
         self.server._register_resident(self.model, res)
+        self.server._clear_model_failure(self.model)
         return res
 
 
@@ -74,6 +82,8 @@ class ColdServer:
         max_concurrent_preps: int = 2,
         memory_budget_bytes: Optional[int] = None,
         share_profile_db: bool = True,
+        quarantine_base_s: float = 0.5,
+        quarantine_max_s: float = 30.0,
     ):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -91,8 +101,14 @@ class ColdServer:
         self._lock = threading.Lock()
         self._resident: "OrderedDict[str, int]" = OrderedDict()  # name->bytes
         self._resident_weights: Dict[str, Dict[str, Any]] = {}
+        # per-model quarantine after failed cold starts: exponential backoff
+        # keeps a sick model from burning admission slots on doomed retries
+        self.quarantine_base_s = quarantine_base_s
+        self.quarantine_max_s = quarantine_max_s
+        self._model_quarantine: Dict[str, Dict[str, float]] = {}
         self.stats = {"admitted": 0, "evictions": 0, "active_preps": 0,
-                      "max_active_preps": 0, "cold_starts": 0}
+                      "max_active_preps": 0, "cold_starts": 0,
+                      "load_failures": 0, "quarantined": 0}
 
     # -- model management ---------------------------------------------------
     def add_model(self, name: str, layers: List[LayerDef],
@@ -116,7 +132,20 @@ class ColdServer:
         """Admit one cold-start request (blocks while ``max_concurrent_preps``
         jobs are in their prep phase) and submit its task graph."""
         eng = self.engines[name]
-        assert eng.plan is not None, f"decide() first for model {name!r}"
+        now = time.monotonic()
+        with self._lock:
+            q = self._model_quarantine.get(name)
+            if q is not None and now < q["until"]:
+                self.stats["quarantined"] += 1
+                retry_after = q["until"] - now
+                raise ModelQuarantined(
+                    f"model {name!r} quarantined after "
+                    f"{int(q['fails'])} failed cold start(s); retry in "
+                    f"{retry_after:.2f}s", retry_after=retry_after)
+        # degradation ladder: a missing/corrupt offline decision falls back
+        # to a validated plan.json reload or the default heuristic plan —
+        # the request proceeds degraded instead of failing admission
+        eng.ensure_plan(x, n_little=n_little or self.n_little)
         self._admission.acquire()
         with self._lock:
             self.stats["admitted"] += 1
@@ -137,6 +166,40 @@ class ColdServer:
         with self._lock:
             self.stats["active_preps"] -= 1
         self._admission.release()
+
+    # -- model quarantine ---------------------------------------------------
+    def _record_model_failure(self, name: str, exc: BaseException) -> None:
+        """A cold start failed past all retries: quarantine the model with
+        exponential backoff so repeated doomed loads neither burn admission
+        slots nor poison the LRU."""
+        with self._lock:
+            q = self._model_quarantine.setdefault(
+                name, {"fails": 0, "until": 0.0})
+            q["fails"] += 1
+            backoff = min(self.quarantine_max_s,
+                          self.quarantine_base_s * (2 ** (q["fails"] - 1)))
+            q["until"] = time.monotonic() + backoff
+            fails = int(q["fails"])
+            self.stats["load_failures"] += 1
+        eng = self.engines.get(name)
+        if eng is not None:
+            eng.repairs.record("model_quarantined", model=name, fails=fails,
+                               backoff_s=backoff, reason=repr(exc))
+
+    def _clear_model_failure(self, name: str) -> None:
+        with self._lock:
+            self._model_quarantine.pop(name, None)
+
+    def health(self) -> Dict[str, Any]:
+        """One machine-readable snapshot of the server's fault domain."""
+        with self._lock:
+            snap = {
+                "stats": dict(self.stats),
+                "quarantine": {n: dict(q) for n, q
+                               in self._model_quarantine.items()},
+            }
+        snap["pool"] = dict(getattr(self.pool, "health", {}) or {})
+        return snap
 
     def run(self, name: str, x) -> RunResult:
         """Serve one request: resident weights (warm) if available, else a

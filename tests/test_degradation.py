@@ -1,0 +1,224 @@
+"""Degradation ladder (PR 6): a cold request must survive a missing or
+corrupt plan, cache bit-rot, a faulting kernel, and repeated load failures
+— degrading latency, never correctness, and journaling every repair."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ColdEngine
+from repro.core.scheduler import Choice
+from repro.executor.server import ColdServer
+from repro.faults import FaultInjector, ModelQuarantined, ReadFault
+from repro.models.cnn import build_cnn
+
+
+def _build(store_dir, **kw):
+    layers, x = build_cnn("squeezenet", image=16, width=0.25)
+    return ColdEngine(layers, store_dir, **kw), x
+
+
+# ---------------------------------------------------------------------------
+# rung: the plan itself
+# ---------------------------------------------------------------------------
+def test_fallback_plan_serves_without_decide(tmp_path):
+    eng, x = _build(tmp_path / "s")
+    plan = eng.ensure_plan(x, n_little=2)
+    assert eng.plan is plan
+    assert len(plan.choices) == len(eng.layers)
+    assert all(not c.use_cache for c in plan.choices)
+    res = eng.run_cold(x, n_little=2)
+    # the fallback picks each op's registry-head kernel — the same default
+    # the shape tracer executes, so the output is pinned by it
+    eng._trace_shapes(x)
+    np.testing.assert_allclose(np.asarray(res.output), eng._output_example,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_plan_reloads_from_disk_after_restart(tmp_path):
+    eng, x = _build(tmp_path / "s")
+    eng.decide(x, n_little=2)
+    # same store, fresh process (new engine, no in-memory plan)
+    eng2, _ = _build(tmp_path / "s")
+    plan = eng2.ensure_plan(x, n_little=2)
+    assert [c.kernel for c in plan.choices] == \
+        [c.kernel for c in eng.plan.choices]
+    assert eng2.repairs.of_kind("plan_fallback") == []
+
+
+def test_corrupt_or_invalid_plan_json_falls_back(tmp_path):
+    eng, x = _build(tmp_path / "s")
+    eng.decide(x, n_little=2)
+    # garbled JSON
+    (tmp_path / "s" / "plan.json").write_text("{ not json")
+    eng2, _ = _build(tmp_path / "s")
+    plan = eng2.ensure_plan(x, n_little=2)
+    assert all(not c.use_cache for c in plan.choices)
+    assert eng2.repairs.of_kind("plan_fallback")
+    # structurally valid JSON naming a kernel that does not exist
+    (tmp_path / "s" / "plan.json").write_text(json.dumps({"plan": {
+        "choices": [["no_such_kernel", False]] * len(eng.layers),
+        "big_prep": [0], "little_queues": [[], []], "est_makespan": 0.0}}))
+    eng3, _ = _build(tmp_path / "s")
+    eng3.ensure_plan(x, n_little=2)
+    assert eng3.repairs.of_kind("plan_fallback")
+    # and the degraded engine still serves
+    res = eng3.run_cold(x, n_little=2)
+    assert np.asarray(res.output).shape == (1, 100)
+
+
+def test_decide_degrades_on_profiler_fault(tmp_path):
+    eng, x = _build(tmp_path / "s")
+
+    class SickProfiler:
+        calls = 0
+
+        def __init__(self, store, **kw):
+            pass
+
+        def profile(self, *a, **kw):
+            raise ReadFault("profiling read failed")
+
+        def close(self):
+            pass
+
+    eng.profiler_factory = SickProfiler
+    stats = eng.decide(x, n_little=2, calibrate_interference=False)
+    assert stats["degraded"] is True
+    assert eng.repairs.of_kind("decide_degraded")
+    # the degraded plan still serves the request
+    res = eng.run_cold(x, n_little=2)
+    assert np.asarray(res.output).shape == (1, 100)
+
+
+# ---------------------------------------------------------------------------
+# rung: cache bit-rot at runtime
+# ---------------------------------------------------------------------------
+def test_corrupt_cache_extent_recomputes_and_repairs(tmp_path):
+    from repro.checkpoint.superbundle import read_super_header
+
+    eng, x = _build(tmp_path / "s", store_fmt="super")
+    eng.decide(x, n_little=2)
+    y0 = np.asarray(eng.run_cold(x, n_little=2).output)
+
+    # force one weighted layer onto the cached path, then rot its extent
+    idx, ldef = next((i, l) for i, l in enumerate(eng.layers)
+                     if l.spec.weight_shapes)
+    name = ldef.spec.name
+    kern = eng._kernel_by_name(ldef.spec, eng.plan.choices[idx].kernel)
+    eng.plan.choices[idx] = Choice(kern.name, True)
+    eng.store.write_cached(name, kern.name,
+                           kern.transform(eng.store.read_raw(name),
+                                          ldef.spec))
+    eng.store._super(flush_all=True)
+    eng.store.close()
+    eng._runtimes.clear()
+    ent = read_super_header(eng.store._super_path)[
+        "layers"][name]["cache"][kern.name][0]
+    with open(eng.store._super_path, "r+b") as f:
+        f.seek(ent["offset"] + ent["nbytes"] // 2)
+        b = f.read(1)
+        f.seek(ent["offset"] + ent["nbytes"] // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+    y1 = np.asarray(eng.run_cold(x, n_little=2).output)
+    np.testing.assert_array_equal(y0, y1)  # same kernels: bit-identical
+    repairs = eng.repairs.of_kind("cache_recompute")
+    assert any(r["layer"] == name for r in repairs)
+    assert any(d.get("layer") == name and "checksum" in d.get("reason", "")
+               for d in eng.store.dropped_entries)
+
+
+# ---------------------------------------------------------------------------
+# rung: faulting kernel -> circuit breaker demotion
+# ---------------------------------------------------------------------------
+def test_kernel_fault_demotes_then_decide_excludes(tmp_path):
+    eng, x = _build(tmp_path / "s")
+    eng.decide(x, n_little=2)
+    y0 = np.asarray(eng.run_cold(x, n_little=2).output)
+    target = next(l.spec.name for l in eng.layers
+                  if l.spec.weight_shapes
+                  and len(eng._kernels_for(l.spec)) > 1)
+
+    eng.fault_injector = FaultInjector(
+        seed=0, rates={"kernel.execute": 1.0},
+        keys={"kernel.execute": {target}}, max_faults_per_key=10 ** 6)
+    eng._runtimes.clear()
+    try:
+        y1 = np.asarray(eng.run_cold(x, n_little=2).output)
+    finally:
+        eng.fault_injector = None
+        eng._runtimes.clear()
+
+    # the request completed on the reference kernel (allclose, not
+    # bit-identical: a different kernel ran for the demoted layer)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-5)
+    assert any(r["layer"] == target
+               for r in eng.repairs.of_kind("kernel_demoted"))
+    open_keys = eng.breaker.open_keys()
+    assert open_keys
+    assert (tmp_path / "s" / "replan_pending.json").exists()
+
+    # breaker already open: the next request short-circuits the demotion
+    demotions_before = len(eng.repairs.of_kind("kernel_demoted"))
+    y2 = np.asarray(eng.run_cold(x, n_little=2).output)
+    np.testing.assert_allclose(y0, y2, rtol=1e-4, atol=1e-5)
+    assert len(eng.repairs.of_kind("kernel_demoted")) == demotions_before
+
+    # a fresh decide() avoids the demoted kernel and clears the marker
+    demoted = {k.split(":", 1)[0] for k in open_keys}
+    stats = eng.decide(x, n_little=2)
+    assert stats["choices"][target][0] not in demoted
+    assert target in stats["replan_cleared"]
+    assert not (tmp_path / "s" / "replan_pending.json").exists()
+
+    # force_reprofile is the operator reset: breakers close again
+    eng.decide(x, n_little=2, force_reprofile=True)
+    assert eng.breaker.open_keys() == []
+
+
+# ---------------------------------------------------------------------------
+# rung: model-level quarantine in the server
+# ---------------------------------------------------------------------------
+def test_server_quarantines_failing_model_with_backoff(tmp_path):
+    server = ColdServer(tmp_path, n_little=2, quarantine_base_s=0.2,
+                        quarantine_max_s=1.0)
+    layers, x = build_cnn("squeezenet", image=16, width=0.25)
+    eng = server.add_model("m", layers)
+    server.decide("m", x, n_little=2)
+
+    # every store read fails, past all retries: the load is doomed
+    eng.store.fault_injector = FaultInjector(
+        seed=0, rates={"store.read_raw": 1.0}, max_faults_per_key=10 ** 9)
+    with pytest.raises(ReadFault):
+        server.cold_start("m", x).result()
+    assert server.stats["load_failures"] == 1
+    assert server.stats["active_preps"] == 0  # slot released on failure
+
+    # quarantined: fast-fail BEFORE burning an admission slot
+    admitted_before = server.stats["admitted"]
+    with pytest.raises(ModelQuarantined) as ei:
+        server.cold_start("m", x)
+    assert server.stats["quarantined"] == 1
+    assert server.stats["admitted"] == admitted_before
+    assert 0 < ei.value.retry_after <= 0.2
+    assert eng.repairs.of_kind("model_quarantined")
+
+    # backoff expires -> another doomed attempt -> backoff doubles
+    time.sleep(0.25)
+    with pytest.raises(ReadFault):
+        server.cold_start("m", x).result()
+    assert server.stats["load_failures"] == 2
+    q = server._model_quarantine["m"]
+    assert q["fails"] == 2
+
+    # heal the store; after the backoff a success clears the quarantine
+    eng.store.fault_injector = None
+    time.sleep(0.45)
+    res = server.cold_start("m", x).result()
+    assert np.asarray(res.output).shape == (1, 100)
+    assert server._model_quarantine == {}
+    h = server.health()
+    assert h["stats"]["load_failures"] == 2
+    assert h["quarantine"] == {}

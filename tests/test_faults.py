@@ -1,0 +1,299 @@
+"""Fault-domain layer (PR 6): typed taxonomy, deterministic injection,
+pool-level bounded retries, deadlines + watchdog lane quarantine, and the
+typed shutdown-leak detection that replaced the silent ``join(timeout)``.
+"""
+import errno
+import json
+import threading
+import time
+
+import pytest
+
+from repro.executor.graph import TaskGraph
+from repro.executor.pool import CorePool
+from repro.faults import (
+    CircuitBreaker, DeadlineExceeded, Fault, FaultInjector, IntegrityFault,
+    JobTimeout, KernelFault, PermanentFault, ReadFault, RepairLog,
+    RetryPolicy, StageFault, TransientFault, WorkerLost, classify,
+    is_transient,
+)
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + classification
+# ---------------------------------------------------------------------------
+def test_taxonomy_shape():
+    f = ReadFault("disk hiccup", layer="l0", site="store.read_raw")
+    assert isinstance(f, TransientFault) and isinstance(f, Fault)
+    assert f.describe()["layer"] == "l0"
+    assert f.describe()["site"] == "store.read_raw"
+    assert isinstance(KernelFault(""), PermanentFault)
+    assert isinstance(IntegrityFault(""), PermanentFault)
+    # JobTimeout stays catchable as the stdlib TimeoutError
+    assert issubclass(JobTimeout, TimeoutError)
+    assert issubclass(JobTimeout, TransientFault)
+    assert is_transient(ReadFault("")) and not is_transient(KernelFault(""))
+
+
+def test_classify_maps_transient_errnos_and_passes_the_rest():
+    c = classify(OSError(errno.EIO, "I/O error"),
+                 site="store.read_raw", layer="l1")
+    assert isinstance(c, ReadFault) and c.layer == "l1"
+    # non-transient errno: not our failure mode, pass through untyped
+    e = OSError(errno.ENOENT, "missing")
+    assert classify(e) is e
+    # already-typed faults and unknown exceptions pass through unchanged
+    rf = ReadFault("typed")
+    assert classify(rf) is rf
+    v = ValueError("not io")
+    assert classify(v) is v
+
+
+def test_retry_policy_backoff_schedule():
+    r = RetryPolicy(max_attempts=3, backoff_s=0.005, backoff_mult=2.0)
+    assert r.delay(1) == pytest.approx(0.005)
+    assert r.delay(2) == pytest.approx(0.010)
+    assert r.delay(3) == pytest.approx(0.020)
+
+
+# ---------------------------------------------------------------------------
+# deterministic injection
+# ---------------------------------------------------------------------------
+def test_injector_deterministic_regardless_of_call_order():
+    """The fault decision is a pure function of (seed, site, key, call#):
+    thread interleaving — modeled here as shuffled key order — must not
+    change which calls fault."""
+    def run(order):
+        inj = FaultInjector(seed=5, rates={"task.read": 0.3},
+                            max_faults_per_key=2)
+        out = {}
+        for key in order:
+            hits = 0
+            for _ in range(10):
+                try:
+                    inj.maybe_fault("task.read", key)
+                except TransientFault:
+                    hits += 1
+            out[key] = hits
+        return out
+
+    keys = [f"k{i}" for i in range(24)]
+    a, b = run(keys), run(list(reversed(keys)))
+    assert a == b
+    assert sum(a.values()) >= 1, "rate 0.3 over 24 keys must inject"
+    # the per-key cap guarantees convergence under bounded retries
+    assert all(v <= 2 for v in a.values())
+
+
+def test_injector_site_classes_and_key_filter():
+    inj = FaultInjector(seed=0, rates={"kernel.execute": 1.0},
+                        keys={"kernel.execute": {"conv1"}},
+                        max_faults_per_key=10)
+    with pytest.raises(KernelFault):
+        inj.maybe_fault("kernel.execute", "conv1")
+    inj.maybe_fault("kernel.execute", "other")  # filtered out: no fault
+    assert inj.n_injected == 1
+    with pytest.raises(StageFault):
+        FaultInjector(seed=0, rates={"task.stage": 1.0}).maybe_fault(
+            "task.stage", "x")
+
+
+# ---------------------------------------------------------------------------
+# pool retries
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def pool():
+    p = CorePool(n_big=1, n_little=2, name="faults-test")
+    yield p
+    p.shutdown()
+
+
+def test_pool_retries_transient_fault_to_success(pool):
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] <= 2:
+            raise ReadFault("transient", layer="a")
+
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0, fn=flaky)
+    job = pool.submit(g, name="flaky",
+                      retry=RetryPolicy(max_attempts=3, backoff_s=0.001))
+    job.wait(10)
+    assert attempts["n"] == 3
+    assert job.retries == 2
+    assert pool.health["task_retries"] >= 2
+    assert [e["action"] for e in job.fault_events] == ["retry", "retry"]
+    # exactly one trace for the task that finally succeeded
+    assert [t.layer for t in job.traces] == ["a"]
+
+
+def test_pool_retry_exhaustion_raises_typed_fault_and_frees_slot(pool):
+    def always():
+        raise ReadFault("disk sick")
+
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0, fn=always)
+    fired = []
+    job = pool.submit(g, name="doomed",
+                      retry=RetryPolicy(max_attempts=2, backoff_s=0.001))
+    job.add_preps_callback(lambda j: fired.append(1))
+    with pytest.raises(ReadFault):
+        job.wait(10)
+    assert job.retries == 1  # bounded: initial + 1 retry, then fail
+    assert pool.health["jobs_failed"] >= 1
+    deadline = time.time() + 2.0
+    while not fired and time.time() < deadline:
+        time.sleep(0.005)
+    assert fired, "preps-done (admission slot release) must fire on failure"
+
+
+def test_permanent_fault_is_not_retried(pool):
+    calls = {"n": 0}
+
+    def perm():
+        calls["n"] += 1
+        raise IntegrityFault("bit rot")
+
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0, fn=perm)
+    job = pool.submit(g, name="perm")
+    with pytest.raises(IntegrityFault):
+        job.wait(10)
+    assert calls["n"] == 1 and job.retries == 0
+
+
+def test_job_wait_timeout_is_typed(pool):
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0,
+          fn=lambda: time.sleep(0.4))
+    job = pool.submit(g, name="slow")
+    with pytest.raises(JobTimeout):
+        job.wait(0.02)
+    with pytest.raises(TimeoutError):  # stdlib-compatible
+        job.wait(0.02)
+    job.wait(10)  # then completes normally
+
+
+# ---------------------------------------------------------------------------
+# shutdown leak detection (the silent `join(timeout)` regression)
+# ---------------------------------------------------------------------------
+def test_shutdown_detects_and_reports_leaked_workers():
+    pool = CorePool(n_big=1, n_little=1, name="leaky")
+    release = threading.Event()
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0,
+          fn=lambda: release.wait(8.0))
+    pool.submit(g, name="hung")
+    time.sleep(0.1)  # let the worker enter the hung task
+    report = pool.shutdown(timeout=0.2)
+    assert report["leaked"], "hung worker must be DETECTED, not ignored"
+    assert isinstance(report["error"], WorkerLost)
+    assert pool.health["workers_lost"] == len(report["leaked"])
+    assert pool.leak_report is report
+    release.set()
+
+
+def test_shutdown_raise_on_leak():
+    pool = CorePool(n_big=1, n_little=1, name="leaky2")
+    release = threading.Event()
+    g = TaskGraph()
+    g.add("a", "read", affinity="little", lane=0,
+          fn=lambda: release.wait(8.0))
+    pool.submit(g, name="hung2")
+    time.sleep(0.1)
+    with pytest.raises(WorkerLost):
+        pool.shutdown(timeout=0.2, raise_on_leak=True)
+    release.set()
+
+
+def test_clean_shutdown_reports_no_leak():
+    pool = CorePool(n_big=1, n_little=1, name="clean")
+    pool.submit(TaskGraph(), name="empty").wait(5)
+    assert pool.shutdown()["leaked"] == []
+    assert pool.health["workers_lost"] == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines + watchdog quarantine
+# ---------------------------------------------------------------------------
+def test_watchdog_quarantines_hung_lane_and_job_completes():
+    pool = CorePool(n_big=1, n_little=2, name="wd",
+                    watchdog_interval_s=0.01)
+    try:
+        hung_once = {"done": False}
+
+        def sticky():
+            if not hung_once["done"]:
+                hung_once["done"] = True
+                time.sleep(1.0)  # first attempt blows the 0.1s deadline
+
+        g = TaskGraph()
+        g.add("a", "read", affinity="little", lane=0, fn=sticky, cost=1.0)
+        g.add("b", "read", affinity="little", lane=0, fn=lambda: None,
+              cost=1.0)
+        g.add("c", "read", affinity="little", lane=1, fn=lambda: None,
+              cost=1.0)
+        job = pool.submit(g, name="hung-lane", deadline_s=0.1)
+        job.wait(10)  # completes: the chain was rescheduled off the lane
+        assert pool.health["deadline_expired"] >= 1
+        assert pool.health["lanes_quarantined"] >= 1
+        assert pool.health["workers_replaced"] >= 1
+        assert {t.layer for t in job.traces} == {"a", "b", "c"}
+    finally:
+        pool.shutdown()
+
+
+def test_execute_deadline_fails_job_typed():
+    """An overdue EXECUTE cannot be quarantined away (the exec chain is
+    strictly ordered on the big cores) — it fails the job with a typed
+    DeadlineExceeded instead of hanging the caller."""
+    pool = CorePool(n_big=1, n_little=1, name="exdl",
+                    watchdog_interval_s=0.01)
+    try:
+        g = TaskGraph()
+        t = g.add("a", "execute", affinity="big",
+                  fn=lambda: time.sleep(0.6))
+        t.deadline_s = 0.05  # per-task deadline overrides the job default
+        job = pool.submit(g, name="stuck-exec")
+        with pytest.raises(DeadlineExceeded):
+            job.wait(10)
+        assert pool.health["deadline_expired"] >= 1
+    finally:
+        pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + repair log
+# ---------------------------------------------------------------------------
+def test_circuit_breaker_threshold_persistence_reset(tmp_path):
+    p = tmp_path / "breakers.json"
+    br = CircuitBreaker(p, threshold=2)
+    key = CircuitBreaker.key("im2col", "sc0")
+    assert br.allow(key)
+    assert not br.record_failure(key, reason="nan")  # below threshold
+    assert br.allow(key)
+    assert br.record_failure(key, reason="nan")      # opens now
+    assert not br.allow(key)
+    br2 = CircuitBreaker(p, threshold=2)             # persisted
+    assert not br2.allow(key) and br2.open_keys() == [key]
+    br2.record_success(key)
+    assert br2.allow(key)
+    br2.record_failure(key)
+    br2.record_failure(key)
+    br2.reset()
+    assert CircuitBreaker(p, threshold=2).allow(key)
+
+
+def test_repair_log_records_and_journals(tmp_path):
+    log = RepairLog(tmp_path / "repairs.jsonl")
+    log.record("cache_recompute", layer="a", kernel="k", reason="crc")
+    log.record("kernel_demoted", layer="b")
+    assert [e["layer"] for e in log.of_kind("cache_recompute")] == ["a"]
+    assert log.counts() == {"cache_recompute": 1, "kernel_demoted": 1}
+    lines = (tmp_path / "repairs.jsonl").read_text().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0])["kind"] == "cache_recompute"
+    # advisory: an unwritable path must never fail the caller
+    RepairLog(tmp_path / "no" / "such" / "dir" / "r.jsonl").record("x")

@@ -1,0 +1,223 @@
+#!/usr/bin/env python
+"""Fleet-wide store scrub — walk a serving root, verify every super-bundle
+container end to end, and compact the slack out.
+
+Per container the scrub:
+
+  1. opens it (which replays any pending intent-journal transaction — the
+     same crash recovery every reader performs);
+  2. eager-verifies EVERY extent against its recorded CRC-32C — including
+     the cache entries a lazy-verify reader would only audit on use.
+     A corrupt cache entry is dropped (it is recomputable from raw);
+     corrupt raw marks the container bad (raw is the source of truth —
+     only a fresh model install can repair it);
+  3. compacts when there is anything to reclaim: dead extents from
+     dropped/superseded entries, plus the drops step 2 just made.
+
+The report is machine-readable (``--json``) so a cron job can alert on
+``ok: false``. ``--smoke`` runs a hermetic self-test (CI gate): builds a
+store, injects bit-rot, and asserts the scrub finds, repairs, and reports
+it.
+
+Usage:
+    PYTHONPATH=src python tools/scrub.py <root> [--json] [--no-compact]
+    PYTHONPATH=src python tools/scrub.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+try:
+    from repro.checkpoint.superbundle import (
+        IntegrityError, SuperBundle, compact,
+    )
+except ImportError:  # invoked as `python tools/scrub.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro.checkpoint.superbundle import (
+        IntegrityError, SuperBundle, compact,
+    )
+
+
+def scrub_bundle(path: Path, *, do_compact: bool = True) -> dict:
+    """Scrub one container. ``ok`` means the container is healthy after the
+    scrub — dropped cache entries are repairs, not failures; corrupt raw
+    (or an unreadable file) is a failure."""
+    rec = {"path": str(path), "ok": True, "raw_ok": True,
+           "recovered_txn_drops": 0, "dropped": [], "compacted": False,
+           "reclaimed_bytes": 0, "errors": []}
+    try:
+        with SuperBundle(path, verify="lazy") as sb:  # open replays journal
+            rec["recovered_txn_drops"] = len(sb.dropped)
+            try:
+                sb._verify_all()  # the eager audit, on demand
+            except IntegrityError as e:
+                rec["ok"] = rec["raw_ok"] = False
+                rec["errors"].append(str(e))
+            rec["dropped"] = list(sb.dropped)
+            slack = sb.reclaimable_bytes()
+    except Exception as e:
+        rec["ok"] = False
+        rec["errors"].append(f"unreadable: {e!r}")
+        return rec
+    # the audit's drops live only in the closed reader's memory; compaction
+    # persists them and reclaims their extents (plus any pre-existing slack)
+    if do_compact and rec["raw_ok"] and (slack > 0 or rec["dropped"]):
+        try:
+            res = compact(path)
+            rec["compacted"] = True
+            rec["reclaimed_bytes"] = res["reclaimed_bytes"]
+            for d in res["dropped"]:
+                if d not in rec["dropped"]:
+                    rec["dropped"].append(d)
+        except Exception as e:
+            rec["ok"] = False
+            rec["errors"].append(f"compact failed: {e!r}")
+    return rec
+
+
+def scrub_store(root: Path, *, do_compact: bool = True) -> dict:
+    """Scrub every ``*.superbundle`` under ``root``; aggregate report."""
+    root = Path(root)
+    t0 = time.perf_counter()
+    reports = [scrub_bundle(p, do_compact=do_compact)
+               for p in sorted(root.glob("**/*.superbundle"))]
+    return {
+        "root": str(root),
+        "files": len(reports),
+        "ok": all(r["ok"] for r in reports),
+        "bad_files": [r["path"] for r in reports if not r["ok"]],
+        "dropped": sum(len(r["dropped"]) for r in reports),
+        "reclaimed_bytes": sum(r["reclaimed_bytes"] for r in reports),
+        "elapsed_s": time.perf_counter() - t0,
+        "reports": reports,
+    }
+
+
+# ---------------------------------------------------------------------------
+# --smoke: hermetic self-test (CI gate)
+# ---------------------------------------------------------------------------
+def _gate(ok: bool, msg: str, failures: list):
+    print(("PASS " if ok else "FAIL ") + msg)
+    if not ok:
+        failures.append(msg)
+
+
+def _flip_byte(path: Path, offset: int):
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def smoke() -> int:
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import LayerStore
+    from repro.checkpoint.superbundle import read_super_header
+
+    failures: list = []
+    with tempfile.TemporaryDirectory(prefix="nnv12_scrub_") as td:
+        root = Path(td)
+        rng = np.random.default_rng(0)
+        for model in ("m1", "m2"):
+            store = LayerStore(root / model, fmt="super")
+            for i in range(3):
+                w = {"w": rng.standard_normal((64, 64)).astype(np.float32)}
+                store.write_raw(f"layer{i}", w)
+                store.write_cached(f"layer{i}", "kern", {"wT": w["w"].T})
+            # drop one entry -> dead extent (slack) left for the scrub
+            store.drop_cached("layer2", "kern")
+            store._super(flush_all=True)
+            store.close()
+
+        # bit-rot a CACHED extent in m1 (repairable: drop + compact) ...
+        p1 = root / "m1" / "model.superbundle"
+        hdr = read_super_header(p1)
+        ent = hdr["layers"]["layer0"]["cache"]["kern"][0]
+        _flip_byte(p1, ent["offset"] + ent["nbytes"] // 2)
+        # ... and a RAW extent in m2 (unrepairable: container marked bad)
+        p2 = root / "m2" / "model.superbundle"
+        hdr2 = read_super_header(p2)
+        ent2 = hdr2["layers"]["layer1"]["raw"][0]
+        _flip_byte(p2, ent2["offset"] + ent2["nbytes"] // 2)
+
+        rep = scrub_store(root)
+        by_path = {r["path"]: r for r in rep["reports"]}
+        r1, r2 = by_path[str(p1)], by_path[str(p2)]
+
+        _gate(rep["files"] == 2, f"scrub walked both containers "
+              f"(files={rep['files']})", failures)
+        _gate(r1["ok"] and r1["raw_ok"],
+              "cache bit-rot container still ok after repair", failures)
+        _gate(any(d.get("layer") == "layer0" for d in r1["dropped"]),
+              f"corrupt cache entry detected+dropped ({r1['dropped']})",
+              failures)
+        _gate(r1["compacted"] and r1["reclaimed_bytes"] > 0,
+              f"slack compacted ({r1['reclaimed_bytes']}B reclaimed)",
+              failures)
+        _gate(not r2["ok"] and not r2["raw_ok"],
+              "raw bit-rot marks the container bad", failures)
+        _gate(not rep["ok"] and str(p2) in rep["bad_files"],
+              "aggregate report surfaces the bad container", failures)
+
+        # post-repair: m1 must verify clean with nothing left to reclaim
+        rep2 = scrub_bundle(p1)
+        _gate(rep2["ok"] and not rep2["dropped"]
+              and rep2["reclaimed_bytes"] == 0,
+              "second scrub of the repaired container is clean", failures)
+
+        # the dropped entry is recomputable: the store serves raw fine and
+        # read_cached returns {} (the runtime ladder recomputes from raw)
+        store = LayerStore(root / "m1", fmt="super")
+        _gate(store.read_raw("layer0", mmap=False)["w"].shape == (64, 64),
+              "raw still served after cache repair", failures)
+        _gate(store.read_cached("layer0", "kern") == {},
+              "dropped cache entry reads as absent, not garbage", failures)
+        store.close()
+
+    if failures:
+        print(f"\n--smoke: {len(failures)} gate(s) FAILED")
+        return 1
+    print("\n--smoke: all gates passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("root", nargs="?", help="serving/store root to walk")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full machine-readable report")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="verify only; do not rewrite containers")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the hermetic self-test and exit")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+    if not args.root:
+        ap.error("a store root is required (or --smoke)")
+    rep = scrub_store(Path(args.root), do_compact=not args.no_compact)
+    if args.json:
+        print(json.dumps(rep, indent=1))
+    else:
+        for r in rep["reports"]:
+            status = "ok" if r["ok"] else "BAD"
+            print(f"{status:3s} {r['path']}  dropped={len(r['dropped'])} "
+                  f"reclaimed={r['reclaimed_bytes']}B "
+                  f"errors={len(r['errors'])}")
+        print(f"{rep['files']} container(s), ok={rep['ok']}, "
+              f"dropped={rep['dropped']}, "
+              f"reclaimed={rep['reclaimed_bytes']}B "
+              f"in {rep['elapsed_s']:.2f}s")
+    return 0 if rep["ok"] else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())
