@@ -371,6 +371,104 @@ def bench_durability(repeats: int = 5, print_csv: bool = True,
     return res
 
 
+def bench_async(name: str, weights: Dict[str, dict], repeats: int = 3,
+                print_csv: bool = True, smoke: bool = False,
+                depth: int = 8) -> Dict[str, float]:
+    """Async read-engine arms vs the sync reference path, per backend.
+
+    For every backend that passes its self-check on this host (uring where
+    the kernel offers it, the portable aio thread pool, the forced-sync
+    degenerate backend), a cold full-model sweep is timed through the
+    store's ``submit_read_raw`` extent API at queue depth 1 (submit, reap,
+    next — the async path's floor) and at ``depth`` (a sliding window of
+    in-flight reads, the executor's steady state). The sync ``read_raw``
+    path stays as the reference arm.
+
+    Hard gate (always): every backend × depth reaps tensors bit-identical
+    to the sync reference. ``--smoke`` adds timing gates: depth 1 must not
+    fall meaningfully behind sync (submit/reap bookkeeping bound), and
+    depth > 1 must at least match the sync arm's cold throughput."""
+    from repro.ioengine import IOEngine, available_backends
+
+    names = list(weights)
+    res: Dict[str, float] = {}
+    with tempfile.TemporaryDirectory(prefix=f"iofmt_async_{name}_") as td:
+        store = LayerStore(Path(td) / "super", fmt="super", verify="never")
+        for ln, w in weights.items():
+            store.write_raw(ln, w)
+        store._super(flush_all=True)
+        ref = {n: {k: np.array(np.asarray(v), copy=True)
+                   for k, v in store.read_raw(n, mmap=False).items()}
+               for n in names}
+
+        t_sync = _sweep(lambda n: store.read_raw(n, mmap=False), names,
+                        repeats, reset=store.close)
+        res["sync_s"] = t_sync
+        per_layer = 1.0 / max(len(names), 1)
+        if print_csv:
+            print(csv_line(f"io_async/{name}/sync", t_sync * per_layer,
+                           f"layers={len(names)};reference"))
+
+        def sweep_depth(engine: IOEngine, window: int) -> float:
+            def reset():
+                store.close()
+                # reopen outside the timed region is NOT done: the cold
+                # open is part of the read path, same as the sync arm
+            best = float("inf")
+            for _ in range(repeats):
+                reset()
+                if CAN_DROP:
+                    drop_page_cache()
+                t0 = time.perf_counter()
+                pending: List = []
+
+                def reap_one():
+                    ln, h = pending.pop(0)
+                    got = h.wait()
+                    for k, v in ref[ln].items():
+                        if not np.array_equal(np.asarray(got[k]), v):
+                            raise AssertionError(
+                                f"async/{engine.name}/d{window}: "
+                                f"{ln}/{k} differs from sync arm")
+                    h.release()
+
+                for n in names:
+                    while len(pending) >= window:
+                        reap_one()   # window full: oldest read reaps first
+                    pending.append((n, store.submit_read_raw(engine, n)))
+                while pending:
+                    reap_one()
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        for backend in available_backends():
+            engine = IOEngine(backend=backend)
+            try:
+                t1 = sweep_depth(engine, 1)
+                td_ = sweep_depth(engine, depth)
+            finally:
+                engine.close()
+            res[f"{backend}_d1_s"] = t1
+            res[f"{backend}_d{depth}_s"] = td_
+            if print_csv:
+                print(csv_line(f"io_async/{name}/{backend}_d1",
+                               t1 * per_layer,
+                               f"vs_sync={t_sync / max(t1, 1e-9):.2f}x"))
+                print(csv_line(f"io_async/{name}/{backend}_d{depth}",
+                               td_ * per_layer,
+                               f"vs_sync={t_sync / max(td_, 1e-9):.2f}x"))
+            if smoke:
+                assert t1 <= t_sync * 1.25 + 5e-3, (
+                    f"{backend} depth-1 async sweep {t1:.4f}s falls behind "
+                    f"sync reference {t_sync:.4f}s (gate: <=25% + 5ms)")
+                assert td_ <= t_sync * 1.05 + 5e-3, (
+                    f"{backend} depth-{depth} sweep {td_:.4f}s slower than "
+                    f"sync reference {t_sync:.4f}s — depth must at least "
+                    f"match the sync arm's cold throughput")
+        store.close()
+    return res
+
+
 def run(print_csv: bool = True, smoke: bool = False) -> Dict[str, Dict[str, float]]:
     if smoke:
         cases: List[Tuple[str, Dict[str, dict]]] = [
@@ -390,6 +488,11 @@ def run(print_csv: bool = True, smoke: bool = False) -> Dict[str, Dict[str, floa
     for name, weights in cases:
         out[name] = bench_model(name, weights, repeats=repeats,
                                 print_csv=print_csv)
+    # async engine arms on the LLM workload (many tensors/extents per layer
+    # — where queue depth pays); the CNN case covers the small-extent shape
+    out["async_llm"] = bench_async(
+        cases[-1][0], cases[-1][1], repeats=repeats, print_csv=print_csv,
+        smoke=smoke)
     out["durability"] = bench_durability(print_csv=print_csv, smoke=smoke)
     if print_csv and not CAN_DROP:
         print("# warning: cannot drop page cache — warm-cache numbers",

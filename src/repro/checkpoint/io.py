@@ -37,13 +37,16 @@ Two facilities:
 from __future__ import annotations
 
 import json
+import os
 import shutil
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.checkpoint.bundle import read_bundle, write_bundle
+from repro.checkpoint.bundle import (
+    _dtype_from_tag, _parse_header_from, read_bundle, write_bundle,
+)
 from repro.checkpoint.integrity import (  # noqa: F401  (re-exported helpers)
     atomic_write_text, crc32c, fsync_dir, fsync_file,
 )
@@ -56,6 +59,99 @@ from repro.faults import classify
 
 def _safe(name: str) -> str:
     return name.replace("/", "_")
+
+
+# ---------------------------------------------------------------------------
+# async read handles (submit/reap pairs over repro.ioengine)
+# ---------------------------------------------------------------------------
+class _ImmediateRead:
+    """Pending-read interface over bytes already in hand (buffered
+    super-bundle writes, npy fallback): wait() returns instantly."""
+
+    def __init__(self, weights: Dict[str, np.ndarray]):
+        self._w = weights
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, np.ndarray]:
+        return self._w
+
+    def nbytes(self) -> int:
+        return sum(int(v.nbytes) for v in self._w.values())
+
+    def release(self) -> None:
+        pass
+
+
+class _PendingBundleRead:
+    """Whole-file async read of one per-layer bundle: submit ONE read for
+    the blob, parse the header out of the reaped buffer (same trick as
+    ``read_bundle``), serve read-only views.  Retry-idempotent like the
+    super-bundle's ``PendingLayerRead``: a fault abandons the ticket and
+    the next ``wait()`` resubmits."""
+
+    def __init__(self, store: "LayerStore", path: Path, engine, injector,
+                 key: str):
+        self.store = store
+        self.path = path
+        self.engine = engine
+        self.injector = injector
+        self.key = key
+        self._fd: Optional[int] = None
+        self._ticket = None
+        self._size = 0
+        self._result: Optional[Dict[str, np.ndarray]] = None
+
+    def submit(self) -> "_PendingBundleRead":
+        if self._ticket is None and self._result is None:
+            self._fd = os.open(self.path, os.O_RDONLY)
+            self.store.open_count += 1
+            try:
+                self._size = os.fstat(self._fd).st_size
+                self._ticket = self.engine.submit(
+                    self._fd, 0, self._size, key=self.key,
+                    injector=self.injector)
+            except BaseException:
+                os.close(self._fd)
+                self._fd = None
+                raise
+        return self
+
+    def nbytes(self) -> int:
+        return self._size
+
+    def _reset(self) -> None:
+        if self._ticket is not None:
+            self._ticket.abandon()
+            self._ticket = None
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, np.ndarray]:
+        if self._result is not None:
+            return self._result
+        self.submit()
+        try:
+            buf = self._ticket.wait(timeout)
+            out: Dict[str, np.ndarray] = {}
+            for e in _parse_header_from(buf)["tensors"]:
+                seg = buf[e["offset"]: e["offset"] + e["nbytes"]]
+                out[e["name"]] = seg.view(
+                    _dtype_from_tag(e["dtype"])).reshape(e["shape"])
+        except Exception:
+            self._reset()  # transient: the retry's next wait() resubmits
+            raise
+        os.close(self._fd)  # payload fully reaped; only the buffer lives on
+        self._fd = None
+        self._result = out
+        return out
+
+    def release(self) -> None:
+        if self._ticket is not None:
+            self._ticket.abandon()
+            self._ticket = None
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +205,9 @@ class LayerStore:
         # cache entries dropped by journal recovery / checksum verification
         # ({"layer", "kernel", "reason"}; fmt="super" only)
         self.dropped_entries: List[dict] = []
+        # coverage of the last readahead() call (satellite of the async
+        # engine work: a silent madvise no-op is now visible downstream)
+        self.readahead_stats: Optional[Dict[str, Any]] = None
         (self.root / "raw").mkdir(parents=True, exist_ok=True)
         (self.root / "cache").mkdir(parents=True, exist_ok=True)
         if fmt == "super":
@@ -227,11 +326,25 @@ class LayerStore:
 
     def readahead(self, layers) -> int:
         """madvise(WILLNEED)-style hints for the layers a plan touches
-        first. Effective for ``fmt="super"``; 0 otherwise."""
+        first. Effective for ``fmt="super"``; 0 otherwise.  Coverage of
+        the last call lands in ``readahead_stats`` (hinted layer/byte
+        counts + whether madvise exists at all) so runs where the hint
+        silently no-ops are distinguishable downstream."""
+        layers = list(layers)
         if self.fmt != "super":
+            self.readahead_stats = {
+                "layers_requested": len(layers), "layers_hinted": 0,
+                "bytes_hinted": 0, "madvise_available": False}
             return 0
         sb = self._super(flush_all=True)
-        return sb.advise_willneed(list(layers)) if sb is not None else 0
+        if sb is None:
+            self.readahead_stats = {
+                "layers_requested": len(layers), "layers_hinted": 0,
+                "bytes_hinted": 0, "madvise_available": False}
+            return 0
+        hinted = sb.advise_willneed(layers)
+        self.readahead_stats = dict(sb.last_readahead or {})
+        return hinted
 
     def maintain(self, *, min_reclaim_bytes: int = 1,
                  background: bool = False) -> Dict[str, Any]:
@@ -424,6 +537,81 @@ class LayerStore:
                 raise
             raise f from e
 
+    # -- async submit/reap reads (repro.ioengine) ---------------------------
+    @property
+    def supports_async(self) -> bool:
+        """True when reads can go through the async I/O engine (the npy
+        legacy layout stays sync — its N-tiny-files shape is the thing
+        the benchmarks keep it around to demonstrate)."""
+        return self.fmt in ("super", "bundle")
+
+    def submit_read_raw(self, engine, layer: str):
+        """Submit ``layer``'s raw extents to the async engine; returns a
+        pending-read handle (``wait()``/``nbytes()``/``release()``).  The
+        same fault-injection site as ``read_raw`` is armed at submit, and
+        the engine arms ``ioengine.submit``/``ioengine.reap``, so chaos
+        runs cover the async path without new wiring."""
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fault("store.read_raw", layer)
+        try:
+            if self.fmt == "super":
+                sb = self._super()
+                pend = (sb.submit_read(engine, layer,
+                                       injector=self.fault_injector)
+                        if sb is not None else None)
+                return pend if pend is not None else _ImmediateRead({})
+            if self.fmt == "bundle":
+                p = self._raw_path(layer)
+                if not p.exists():
+                    return _ImmediateRead({})
+                return _PendingBundleRead(self, p, engine,
+                                          self.fault_injector,
+                                          key=layer).submit()
+            return _ImmediateRead(self._read(self._raw_path(layer), False))
+        except OSError as e:
+            f = classify(e, site="store.read_raw", layer=layer)
+            if f is e:
+                raise
+            raise f from e
+
+    def submit_read_cached(self, engine, layer: str, kernel: str):
+        """Async counterpart of ``read_cached``; buffered (not-yet-flushed)
+        entries are served immediately, a dropped-pending entry reads as
+        absent, and a reaped extent failing its CRC audit drops exactly
+        like the sync path (``wait()`` returns ``{}``)."""
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fault("store.read_cached", layer)
+        try:
+            if self.fmt == "super":
+                if (layer, kernel) in self._pending_drop:
+                    return _ImmediateRead({})
+                pend_w = self._pending_cache.get((layer, kernel))
+                if pend_w is not None:
+                    return _ImmediateRead(
+                        {k: np.array(v) for k, v in pend_w.items()})
+                sb = self._super()
+                pend = (sb.submit_read(engine, layer, kernel=kernel,
+                                       injector=self.fault_injector)
+                        if sb is not None else None)
+                if pend is None:
+                    return _ImmediateRead({})
+                pend.on_drop = self._harvest_drops
+                return pend
+            if self.fmt == "bundle":
+                p = self._cache_path(layer, kernel)
+                if not p.exists():
+                    return _ImmediateRead({})
+                return _PendingBundleRead(self, p, engine,
+                                          self.fault_injector,
+                                          key=f"{layer}@{kernel}").submit()
+            return _ImmediateRead(
+                self._read(self._cache_path(layer, kernel), False))
+        except OSError as e:
+            f = classify(e, site="store.read_cached", layer=layer)
+            if f is e:
+                raise
+            raise f from e
+
     def audit_cached(self, layer: str, kernel: str) -> bool:
         """Run the lazy CRC audit on a cache entry NOW, covering the
         zero-copy mmap path (which normally serves views unverified). The
@@ -445,11 +633,18 @@ class LayerStore:
             return True
         ok = sb._verify_cached(layer, kernel)
         if not ok:
-            # harvest the drop report immediately so the repair event can
-            # cite the reason without waiting for the reader to reopen
-            self.dropped_entries += sb.dropped[self._reader_seen:]
-            self._reader_seen = len(sb.dropped)
+            self._harvest_drops()
         return ok
+
+    def _harvest_drops(self) -> None:
+        """Sync the reader's drop reports into ``dropped_entries`` NOW, so
+        a repair event can cite the reason without waiting for the reader
+        to reopen (audit failures and async CRC drops both land here)."""
+        sb = self._reader
+        if sb is None:
+            return
+        self.dropped_entries += sb.dropped[self._reader_seen:]
+        self._reader_seen = len(sb.dropped)
 
     def has_cached(self, layer: str, kernel: str) -> bool:
         if self.fmt == "super":

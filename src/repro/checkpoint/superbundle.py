@@ -480,6 +480,11 @@ class SuperBundle:
             self._mm = mmap_mod.mmap(f.fileno(), 0,
                                      access=mmap_mod.ACCESS_READ)
         self._buf = np.frombuffer(self._mm, dtype=np.uint8)
+        # separate fd for the async engine's extent preads: the shared
+        # mmap stays the sequential-baseline/profiler path, the engine
+        # reads the same extents at queue depth through this descriptor
+        self._fd: Optional[int] = os.open(self.path, os.O_RDONLY)
+        self.last_readahead: Optional[dict] = None
         self.header, self.version, self._hlen = _parse_super_header(
             self._buf, src=self.path)
         self.generation = int(self.header.get("generation", 0))
@@ -500,6 +505,9 @@ class SuperBundle:
             self._mm.close()
         except BufferError:
             pass  # live views pin the map; the GC reclaims it with them
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
 
     def __enter__(self):
         return self
@@ -605,27 +613,60 @@ class SuperBundle:
             #            back to raw + transform
         return self._views(ents, materialize)
 
+    # -- async extent reads --------------------------------------------------
+    def submit_read(self, engine, layer: str, *, kernel: Optional[str] = None,
+                    injector=None) -> Optional["PendingLayerRead"]:
+        """Submit every extent of ``layer`` (raw, or one kernel's cache
+        when ``kernel`` is given) to the async I/O engine and return a
+        :class:`PendingLayerRead`; ``None`` when the section is absent
+        (mirrors ``read_raw``/``read_cached`` returning ``{}``).
+
+        The reaped bytes go through the SAME verification ladder as the
+        mmap path — lazily-verified cache mismatches drop the entry and
+        surface in ``self.dropped``, raw mismatches raise
+        ``IntegrityError`` — except checksums audit the engine-read bytes
+        themselves, so the audit covers the path actually served."""
+        if self._fd is None:
+            raise RuntimeError(f"{self.path}: submit_read on closed bundle")
+        sect = self._layers.get(layer)
+        if not sect:
+            return None
+        if kernel is None:
+            entries = sect["raw"]
+        else:
+            entries = sect.get("cache", {}).get(kernel)
+            if entries is None:
+                return None
+        return PendingLayerRead(self, layer, kernel, entries, engine,
+                                injector).submit()
+
     # -- readahead ----------------------------------------------------------
     def advise_willneed(self, layers: Optional[Sequence[str]] = None) -> int:
         """``madvise(MADV_WILLNEED)`` the extents of the given layers (the
         first-k of the plan) so the kernel prefetches ahead of the prep
         pipeline. Returns the number of layers hinted (0 where madvise is
-        unavailable)."""
-        if not hasattr(self._mm, "madvise"):
+        unavailable) and records coverage in ``self.last_readahead`` so
+        callers can tell a hinted run from a silently-unhinted one."""
+        wanted = list(self.order if layers is None else layers)
+        stats = {"layers_requested": len(wanted), "layers_hinted": 0,
+                 "bytes_hinted": 0,
+                 "madvise_available": hasattr(self._mm, "madvise")}
+        self.last_readahead = stats
+        if not stats["madvise_available"]:
             return 0
         page = mmap_mod.PAGESIZE
-        hinted = 0
-        for layer in (self.order if layers is None else layers):
+        for layer in wanted:
             ext = self.extent(layer)
             if ext is None:
                 continue
             lo = ext[0] // page * page
             try:
                 self._mm.madvise(mmap_mod.MADV_WILLNEED, lo, ext[1] - lo)
-                hinted += 1
+                stats["layers_hinted"] += 1
+                stats["bytes_hinted"] += ext[1] - lo
             except (ValueError, OSError):
                 pass
-        return hinted
+        return stats["layers_hinted"]
 
     # -- payload accounting --------------------------------------------------
     def raw_nbytes(self, layer: Optional[str] = None) -> int:
@@ -665,6 +706,111 @@ class SuperBundle:
         dropped/superseded cache entries (0 for a freshly-written file)."""
         return max(0, self.file_size() - self.header_region_bytes()
                    - self.live_disk_bytes())
+
+
+class PendingLayerRead:
+    """In-flight async reads for one layer section (raw, or one kernel's
+    cache entries).
+
+    ``wait()`` reaps every extent, runs the verification ladder on the
+    reaped bytes, and returns ``{name: array}`` of **read-only** typed
+    views into engine pool buffers (a corrupt lazily-verified cache
+    section returns ``{}`` after dropping the entry, exactly like the
+    mmap path).  The views stay valid until ``release()`` recycles the
+    buffers — the executor calls that per job, after staging has copied
+    everything device-side.
+
+    ``wait()`` is retry-idempotent: a transient fault (injected or real)
+    abandons the in-flight tickets — buffers recycle only once the
+    backend is done with them — and resets the pending read, so the
+    executor's next bounded-retry attempt resubmits cleanly.
+    """
+
+    def __init__(self, sb: SuperBundle, layer: str, kernel: Optional[str],
+                 entries: List[dict], engine, injector):
+        self.sb = sb
+        self.layer = layer
+        self.kernel = kernel
+        self.engine = engine
+        self.injector = injector
+        self._entries = entries
+        self._tickets: Optional[List[tuple]] = None
+        self._result: Optional[LayerWeights] = None
+        # set by the owning LayerStore: called right after a corrupt cache
+        # entry is dropped, so store-level drop reporting sees it without
+        # waiting for the reader to reopen
+        self.on_drop: Optional[Callable[[], None]] = None
+
+    def submit(self) -> "PendingLayerRead":
+        if self._tickets is None and self._result is None:
+            tickets = []
+            try:
+                for e in self._entries:
+                    tickets.append((e, self.engine.submit(
+                        self.sb._fd, e["offset"], e["nbytes"],
+                        key=f"{self.layer}/{e['name']}",
+                        injector=self.injector)))
+            except BaseException:
+                for _, t in tickets:
+                    t.abandon()
+                raise
+            self._tickets = tickets
+        return self
+
+    def nbytes(self) -> int:
+        return sum(e["nbytes"] for e in self._entries)
+
+    def _reset(self) -> None:
+        if self._tickets is not None:
+            for _, t in self._tickets:
+                t.abandon()
+            self._tickets = None
+
+    def wait(self, timeout: Optional[float] = None) -> LayerWeights:
+        if self._result is not None:
+            return self._result
+        self.submit()
+        out: LayerWeights = {}
+        try:
+            for e, t in self._tickets:
+                view = t.wait(timeout)
+                if (self.sb.verify != "never"
+                        and id(e) not in self.sb._verified
+                        and "crc32c" in e
+                        and crc32c(view) != e["crc32c"]):
+                    if self.kernel is None:
+                        raise IntegrityError(
+                            f"{self.sb.path}: raw tensor "
+                            f"{self.layer}/{e['name']} failed checksum "
+                            "verification")
+                    # cache tear: drop the entry like _verify_cached and
+                    # let the caller fall back to raw + transform
+                    self.sb._layers[self.layer]["cache"].pop(self.kernel,
+                                                             None)
+                    self.sb.dropped.append({
+                        "layer": self.layer, "kernel": self.kernel,
+                        "reason": f"checksum mismatch in {e['name']}"})
+                    self._reset()
+                    self._result = {}
+                    if self.on_drop is not None:
+                        self.on_drop()
+                    return self._result
+                self.sb._verified.add(id(e))
+                out[e["name"]] = view.view(
+                    _dtype_from_tag(e["dtype"])).reshape(e["shape"])
+        except IntegrityError:
+            self._reset()
+            raise
+        except Exception:
+            self._reset()  # transient: next retry attempt resubmits
+            raise
+        self._result = out
+        return out
+
+    def release(self) -> None:
+        if self._tickets is not None:
+            for _, t in self._tickets:
+                t.abandon()
 
 
 # ---------------------------------------------------------------------------

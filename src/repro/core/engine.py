@@ -40,9 +40,10 @@ from repro.executor.pool import CorePool
 from repro.core.profiler import CoreModel, OpProfile, ProfileDB, Profiler
 from repro.core.registry import (
     Kernel, LayerSpec, StatelessKernel, registry_for, shape_class_key,
+    shape_class_sibling_key,
 )
 from repro.core.scheduler import (
-    Choice, LayerCandidates, Plan, pareto_filter, schedule,
+    Choice, LayerCandidates, Plan, pareto_filter, plan_read_depth, schedule,
 )
 from repro.core.staging import stage_weights
 from repro.faults import (
@@ -71,7 +72,10 @@ class ColdEngine:
         store_verify: str = "lazy",
         share_shape_classes: bool = True,
         profile_db: Union[str, Path, ProfileDB, None] = "auto",
+        profile_db_approx: bool = False,
         pool: Optional[CorePool] = None,
+        io_engine: Any = "auto",
+        stage_engine: Any = "auto",
     ):
         self.layers = layers
         self.specs = [l.spec for l in layers]
@@ -93,7 +97,15 @@ class ColdEngine:
         else:
             self.profile_db = ProfileDB(Path(profile_db))
         self.profiler_factory: Callable[..., Profiler] = Profiler
+        # approximate shape-class matching: a profile DB miss may fall back
+        # to a sibling class identical up to the batch dim (exact first)
+        self.profile_db_approx = profile_db_approx
         self.pool = pool                  # shared persistent CorePool
+        # async prep I/O: "auto" resolves to the process-wide IOEngine when
+        # the store format supports extent submission; False/None forces
+        # the sync reference path; an IOEngine instance is used as-is
+        self._io_engine_opt = io_engine
+        self._stage_engine_opt = stage_engine
         # -- fault domain (docs/robustness.md) --------------------------
         self.fault_injector = None            # chaos: threaded into runtimes
         self.retry_policy = None              # per-task retry (None=default)
@@ -108,6 +120,7 @@ class ColdEngine:
         self._layer_inputs: Optional[List[np.ndarray]] = None
         self._jitted_cache: Dict[tuple, Dict[str, Callable]] = {}
         self._sc_by_layer: Dict[str, str] = {}
+        self._sib_by_sc: Dict[str, Optional[str]] = {}
         self._transform_avatars: Dict[Tuple[str, str], Dict[str, Any]] = {}
         # persist raw weights (the on-device model files)
         for l in layers:
@@ -144,14 +157,18 @@ class ColdEngine:
         layer name is folded in, making every class a singleton (the legacy
         per-layer path)."""
         xin = np.asarray(xin)
-        key = shape_class_key(
-            l.spec,
+        kw = dict(
             input_shape=tuple(xin.shape), input_dtype=str(xin.dtype),
             weight_dtypes={k: str(np.asarray(v).dtype)
                            for k, v in l.weights.items()} or None,
         )
+        key = shape_class_key(l.spec, **kw)
         if not self.share_shape_classes:
             key = f"{key}:{l.spec.name}"
+        else:
+            # batch-agnostic sibling identity for approximate ProfileDB
+            # fan-out (legacy per-layer classes never share, so no sibling)
+            self._sib_by_sc[key] = shape_class_sibling_key(l.spec, **kw)
         return key
 
     def _options_from_profiles(
@@ -307,16 +324,18 @@ class ColdEngine:
             for sc, idxs in groups.items():
                 rep, xin = self.layers[idxs[0]], layer_inputs[idxs[0]]
                 plist: List[OpProfile] = []
+                sib = self._sib_by_sc.get(sc)
                 for kern in self._kernels_for(rep.spec):
                     p = None
                     if db is not None and not force_reprofile:
-                        p = db.get(sc, kern.name)
+                        p = db.get(sc, kern.name, sibling_key=sib,
+                                   approx=self.profile_db_approx)
                         if p is not None:
                             db_hits += 1
                     if p is None:
                         p = prof.profile(rep.spec, kern, xin)
                         if db is not None:
-                            db.put(sc, kern.name, p)
+                            db.put(sc, kern.name, p, sibling_key=sib)
                     plist.append(p)
                     if p.transformed_avatars is not None:
                         self._transform_avatars[(sc, kern.name)] = \
@@ -358,6 +377,25 @@ class ColdEngine:
                 cands[i] = LayerCandidates(layer=name, options=opts)
 
         self.plan = schedule(cands, n_little)
+        # I/O queue depth for the async engine: planned from the same
+        # profiled costs the kernel scheduler just optimized — enough
+        # parallel reads to hide the read column behind transform+stage,
+        # clamped so a lane never floods the disk past the measured
+        # interference regime. Persisted in plan.json with the rest of the
+        # decision (graph.compile_plan stamps it on every read task).
+        cm = self.core_model
+        read_costs, other_costs = [], []
+        for l, c in zip(self.layers, self.plan.choices):
+            p = next((pp for pp in sc_profiles[self._sc_by_layer[l.spec.name]]
+                      if pp.kernel == c.kernel), None)
+            if p is None:
+                continue
+            rd = p.read_cached_s if c.use_cache else p.read_raw_s
+            read_costs.append(rd * cm.little_read)
+            xf = 0.0 if c.use_cache else p.transform_s * cm.little_transform
+            other_costs.append(xf + p.stage_s * cm.little_stage)
+        self.plan.read_depth = plan_read_depth(
+            read_costs, other_costs, io_interference=self.io_interference)
         self._runtimes.clear()     # cached runtimes are plan-bound
         # materialize/drop the weight cache per the plan; entries already
         # materialized by a previous decide() from the SAME raw weights
@@ -418,12 +456,15 @@ class ColdEngine:
             "plan_generation_s": gen_s,
             "est_makespan_s": self.plan.est_makespan,
             "io_interference": self.io_interference,
+            "read_depth": self.plan.read_depth,
             "cache_bytes": self.store.cache_bytes(),
             "model_bytes": self.store.model_bytes(),
             "prep_split": split,
             "shape_classes": len(groups),
             "profile_calls": profile_calls,
             "profile_db_hits": db_hits,
+            "profile_db_approx_hits": (
+                db.stats["approx_hits"] if db is not None else 0),
             "store_maintenance": maintenance,
             "replan_cleared": replan_cleared,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
@@ -562,6 +603,33 @@ class ColdEngine:
         self._jitted_cache[key] = jitted
         return jitted
 
+    def _resolve_io_engines(self) -> Tuple[Optional[Any], Optional[Any]]:
+        """Resolve the ``io_engine``/``stage_engine`` knobs to instances.
+
+        ``"auto"`` binds the process-wide engines lazily — only when a
+        runtime is actually built, and only when the store format supports
+        extent submission (legacy npy stays on the sync reference path).
+        ``False``/``None`` disables; instances pass through."""
+        io_eng = self._io_engine_opt
+        if io_eng == "auto":
+            io_eng = None
+            if getattr(self.store, "supports_async", False):
+                from repro.ioengine import get_io_engine
+
+                io_eng = get_io_engine()
+        elif not io_eng:
+            io_eng = None
+        st_eng = self._stage_engine_opt
+        if st_eng == "auto":
+            st_eng = None
+            if io_eng is not None:
+                from repro.ioengine import get_stage_engine
+
+                st_eng = get_stage_engine()
+        elif not st_eng:
+            st_eng = None
+        return io_eng, st_eng
+
     def make_runtime(self, *, n_little: int = 3, plan: Optional[Plan] = None,
                      work_stealing: bool = True) -> PipelineRuntime:
         plan = plan or self.plan
@@ -604,6 +672,7 @@ class ColdEngine:
             return self._fallback_execute(
                 name, x, exc, chosen=choice_by_layer[name].kernel)
 
+        io_eng, st_eng = self._resolve_io_engines()
         return PipelineRuntime(
             self.specs, kernels, use_cache, self.store, jitted,
             n_little=n_little, work_stealing=work_stealing,
@@ -611,6 +680,7 @@ class ColdEngine:
             retry=self.retry_policy, deadline_s=self.task_deadline_s,
             fault_injector=self.fault_injector, repair_log=self.repairs,
             fallback_exec=fallback_exec, exec_allowed=exec_allowed,
+            io_engine=io_eng, stage_engine=st_eng,
         )
 
     def _runtime(self, *, n_little: int, work_stealing: bool) -> PipelineRuntime:

@@ -46,6 +46,11 @@ class RunResult:
     total_s: float
     traces: List[OpTrace] = field(default_factory=list)
     weights: Optional[Dict[str, Any]] = None  # resident post-run weights
+    # readahead coverage of this run ({"mode", "layers_requested",
+    # "layers_hinted", "bytes_hinted", ...}); None when the runtime issued
+    # no hint at all — benchmark breakdowns use this to tell hinted runs
+    # from ones where the hint silently no-oped (e.g. no madvise)
+    readahead: Optional[Dict[str, Any]] = None
 
     def stage_seconds(self) -> Dict[str, float]:
         agg: Dict[str, float] = {}
@@ -58,10 +63,12 @@ class PipelineJob:
     """Handle for one in-flight cold run submitted to the pool."""
 
     def __init__(self, job: Job, state: Dict[str, Any],
-                 weights: Dict[str, Any]):
+                 weights: Dict[str, Any],
+                 readahead: Optional[Dict[str, Any]] = None):
         self.job = job
         self._state = state
         self._weights = weights
+        self._readahead = readahead
 
     @property
     def t0(self) -> float:
@@ -77,7 +84,74 @@ class PipelineJob:
     def result(self, timeout: Optional[float] = None) -> RunResult:
         self.job.wait(timeout)
         return RunResult(output=self._state["y"], total_s=self.job.total_s,
-                         traces=self.job.traces, weights=self._weights)
+                         traces=self.job.traces, weights=self._weights,
+                         readahead=self._readahead)
+
+
+class _AsyncReads:
+    """Per-job submit/reap ledger over the async I/O engine.
+
+    Submissions are keyed by layer and idempotent, so the depth-prefetch
+    a read task issues for its lane successors composes with work
+    stealing (whoever ends up running a stolen layer's read reaps the
+    same pending handle).  Pending handles self-reset on transient
+    faults, so the pool's bounded retries resubmit cleanly; pool buffers
+    recycle at job end via ``close()`` (a ``Job.add_done_callback``),
+    the first moment no retry or zombie attempt can still need the
+    views."""
+
+    def __init__(self, runtime: "PipelineRuntime", engine):
+        self.rt = runtime
+        self.engine = engine
+        self.lock = threading.Lock()
+        self.pending: Dict[str, Any] = {}
+        self.closed = False
+        self.prefetched = 0
+        self.prefetch_bytes = 0
+
+    def _submit_locked(self, layer: str):
+        if layer in self.pending or self.closed:
+            return self.pending.get(layer)
+        rt = self.rt
+        if not rt.specs[layer].weight_shapes:
+            return None
+        if rt.use_cache.get(layer, False):
+            h = rt.store.submit_read_cached(self.engine, layer,
+                                            rt.kernels[layer].name)
+        else:
+            h = rt.store.submit_read_raw(self.engine, layer)
+        self.pending[layer] = h
+        return h
+
+    def prefetch(self, layers) -> None:
+        """Best-effort submissions for upcoming layers (depth readahead).
+        Failures are swallowed: the layer's own read task resubmits with
+        the pool's retry budget when its turn comes."""
+        for name in layers:
+            try:
+                with self.lock:
+                    before = name in self.pending
+                    h = self._submit_locked(name)
+                if h is not None and not before:
+                    self.prefetched += 1
+                    self.prefetch_bytes += h.nbytes()
+            except Exception:
+                continue
+
+    def wait(self, layer: str):
+        with self.lock:
+            h = self._submit_locked(layer)
+        if h is None:
+            return {}
+        return h.wait()
+
+    def close(self) -> None:
+        with self.lock:
+            self.closed = True
+            handles = list(self.pending.values())
+            self.pending.clear()
+        for h in handles:
+            h.release()
 
 
 class PipelineRuntime:
@@ -100,6 +174,9 @@ class PipelineRuntime:
         repair_log=None,                  # faults.RepairLog (ladder events)
         fallback_exec: Optional[Callable] = None,  # (layer, x, exc) -> y
         exec_allowed: Optional[Callable[[str], bool]] = None,  # breaker
+        io_engine=None,                   # repro.ioengine.IOEngine (async
+                                          # submit/reap reads; None = sync)
+        stage_engine=None,                # repro.ioengine.StageEngine
     ):
         self.specs = {s.name: s for s in specs}
         self.order = [s.name for s in specs]
@@ -118,6 +195,12 @@ class PipelineRuntime:
         self.repair_log = repair_log
         self.fallback_exec = fallback_exec
         self.exec_allowed = exec_allowed
+        # async reads go through the engine only when the store's format
+        # supports extent submission (npy legacy stays sync by design)
+        self.io_engine = (io_engine if io_engine is not None
+                          and getattr(store, "supports_async", False)
+                          else None)
+        self.stage_engine = stage_engine
         # per-layer prep-cost estimates drive donor selection when stealing;
         # weight bytes are the fallback proxy when no profile is plumbed in
         self.prep_costs = prep_costs or {
@@ -208,6 +291,25 @@ class PipelineRuntime:
             return w
         return self.store.read_raw(layer)
 
+    def _read_op_async(self, reads: _AsyncReads, layer: str):
+        """Async 'read' task body: reap the layer's pending submission.
+
+        Same degradation ladder as ``_read_op`` — the CRC audit runs on
+        the reaped bytes inside the pending read (covering exactly the
+        bytes served), and a dropped/missing cache entry recomputes from
+        raw with the repair journaled."""
+        w = reads.wait(layer)
+        if self.use_cache.get(layer, False) and not w:
+            spec = self.specs[layer]
+            kern = self.kernels[layer]
+            if spec.weight_shapes:
+                w = kern.transform(self.store.read_raw(layer), spec)
+                if self.repair_log is not None:
+                    self.repair_log.record(
+                        "cache_recompute", layer=layer, kernel=kern.name,
+                        reason="entry missing/dropped (async read)")
+        return w
+
     # -- graph compilation + submission -------------------------------------
     def submit(self, x, plan: Plan, *, graph_hook=None) -> PipelineJob:
         """Compile the plan into a task graph and hand it to the persistent
@@ -223,10 +325,32 @@ class PipelineRuntime:
         state: Dict[str, Any] = {"y": jnp.asarray(x)}
 
         queues = [[self.order[i] for i in q] for q in plan.little_queues]
-        self._hint_readahead(
+        hint_layers = (
             [q[0] for q in queues if q]
             + [self.order[i] for i in plan.big_prep]
             + self.order[: 2 * (len(queues) + 1)])
+
+        reads = (_AsyncReads(self, self.io_engine)
+                 if self.io_engine is not None else None)
+        ra_stats: Optional[Dict[str, Any]] = None
+        if reads is not None:
+            # readahead hints route through the engine: the plan's first
+            # layers are submitted NOW, so their bytes are moving before
+            # any worker picks up a read task (the async analogue of the
+            # madvise hint, and counted the same way)
+            seen: set = set()
+            first = [n for n in hint_layers
+                     if not (n in seen or seen.add(n))]
+            reads.prefetch(first)
+            ra_stats = {"mode": "engine", "layers_requested": len(first),
+                        "layers_hinted": reads.prefetched,
+                        "bytes_hinted": reads.prefetch_bytes,
+                        "madvise_available": False}
+        else:
+            self._hint_readahead(hint_layers)
+            st = getattr(self.store, "readahead_stats", None)
+            if st is not None:
+                ra_stats = {"mode": "madvise", **st}
 
         graph = compile_plan(
             self.order, plan,
@@ -237,6 +361,16 @@ class PipelineRuntime:
             stage_in_prep=self.stage_in_prep,
             deferred_stage_affinity="any" if self.prefetch else "big",
         )
+        # lane successors for depth prefetch: a read task submits its own
+        # layer plus the next (depth-1) layers of its lane, so a little
+        # core keeps Plan.read_depth reads in flight instead of one
+        succ: Dict[str, List[str]] = {}
+        if reads is not None:
+            seqs = list(graph.lane_queues().values())
+            seqs.append(graph.big_prep_layers())
+            for seq in seqs:
+                for i, n in enumerate(seq):
+                    succ[n] = seq[i + 1:]
 
         # task fns are VALUE-IDEMPOTENT: every stage writes its own
         # (name, kind) key instead of mutating/popping a shared one, so a
@@ -244,9 +378,17 @@ class PipelineRuntime:
         # recomputes the identical value into the same slot and cannot
         # corrupt the chain. (Intermediates are held until the job ends;
         # the pool-retry safety is worth the transient footprint.)
-        def read_fn(name):
+        def read_fn(name, depth=1):
+            if reads is None:
+                def fn():
+                    pending[(name, "read")] = self._read_op(name)
+                return fn
+
+            ahead = succ.get(name, [])[:max(0, depth - 1)]
+
             def fn():
-                pending[(name, "read")] = self._read_op(name)
+                reads.prefetch(ahead)   # keep the lane at planned depth
+                pending[(name, "read")] = self._read_op_async(reads, name)
             return fn
 
         def transform_fn(name):
@@ -260,7 +402,10 @@ class PipelineRuntime:
                 src = pending.get((name, "xf"), None)
                 if src is None:
                     src = pending[(name, "read")]
-                w = self._device_put(src)
+                if self.stage_engine is not None:
+                    w = self.stage_engine.stage(src)
+                else:
+                    w = self._device_put(src)
                 with lock:
                     weights[name] = w
             return fn
@@ -298,7 +443,10 @@ class PipelineRuntime:
         binders = {"read": read_fn, "transform": transform_fn,
                    "stage": stage_fn, "execute": execute_fn}
         for task in graph.tasks:
-            task.fn = binders[task.kind](task.layer)
+            if task.kind == "read":
+                task.fn = read_fn(task.layer, task.depth)
+            else:
+                task.fn = binders[task.kind](task.layer)
         if graph_hook is not None:
             graph_hook(graph, weights, lock)
 
@@ -306,7 +454,11 @@ class PipelineRuntime:
             graph, name=f"cold:{self.order[0]}..{self.order[-1]}",
             allow_steal=self.work_stealing, t0=t0,
             retry=self.retry, deadline_s=self.deadline_s)
-        return PipelineJob(job, state, weights)
+        if reads is not None:
+            # engine buffers recycle only once no retry/zombie can still
+            # reap them — i.e. when the job is finished for good
+            job.add_done_callback(lambda _j: reads.close())
+        return PipelineJob(job, state, weights, readahead=ra_stats)
 
     def run(self, x, plan: Plan) -> RunResult:
         return self.submit(x, plan).result()
@@ -343,4 +495,8 @@ class PipelineRuntime:
             y = self.jitted[name](weights[name], y)
             jax.block_until_ready(y)
             traces.append(OpTrace(name, "execute", "big", ts - t0, time.perf_counter() - t0))
-        return RunResult(output=y, total_s=time.perf_counter() - t0, traces=traces)
+        st = getattr(self.store, "readahead_stats", None)
+        return RunResult(output=y, total_s=time.perf_counter() - t0,
+                         traces=traces,
+                         readahead=({"mode": "madvise", **st}
+                                    if st is not None else None))

@@ -357,7 +357,12 @@ class ProfileDB:
         # other host's profiles on save
         self._hosts: Dict[str, Dict[str, Dict[str, dict]]] = {}
         self.entries: Dict[str, Dict[str, dict]] = {}
-        self.stats = {"hits": 0, "misses": 0}
+        # sibling index (batch-agnostic fan-out): sibling_key -> list of
+        # exact shape classes profiled under it, per host. Approximate
+        # lookups resolve through it AFTER the exact key misses.
+        self._host_siblings: Dict[str, Dict[str, List[str]]] = {}
+        self.siblings: Dict[str, List[str]] = {}
+        self.stats = {"hits": 0, "misses": 0, "approx_hits": 0}
         self._dirty = False
         self._load()
 
@@ -372,17 +377,41 @@ class ProfileDB:
             return  # different schema: everything misses cleanly
         self._hosts = raw.get("hosts", {})
         self.entries = self._hosts.get(self.host, {})
+        # optional key: DB files from before the sibling index load fine
+        self._host_siblings = raw.get("siblings", {})
+        self.siblings = self._host_siblings.get(self.host, {})
 
-    def get(self, shape_class: str, kernel: str) -> Optional[OpProfile]:
+    def get(self, shape_class: str, kernel: str, *,
+            sibling_key: Optional[str] = None,
+            approx: bool = False) -> Optional[OpProfile]:
+        """Exact (shape-class, kernel) lookup; with ``approx=True`` and a
+        ``sibling_key``, a miss falls through to any already-profiled class
+        that differs only in the batch dim (``shape_class_sibling_key``).
+        Exact entries always win — the approximate rung only spares a
+        profiling call when nothing exact exists, and its per-op costs are
+        estimates for candidate ranking, never correctness inputs."""
         d = self.entries.get(shape_class, {}).get(kernel)
-        if d is None:
-            self.stats["misses"] += 1
-            return None
-        self.stats["hits"] += 1
-        return OpProfile(**d)
+        if d is not None:
+            self.stats["hits"] += 1
+            return OpProfile(**d)
+        if approx and sibling_key is not None:
+            for sc in self.siblings.get(sibling_key, ()):
+                if sc == shape_class:
+                    continue
+                d = self.entries.get(sc, {}).get(kernel)
+                if d is not None:
+                    self.stats["approx_hits"] += 1
+                    return OpProfile(**d)
+        self.stats["misses"] += 1
+        return None
 
-    def put(self, shape_class: str, kernel: str, profile: OpProfile):
+    def put(self, shape_class: str, kernel: str, profile: OpProfile, *,
+            sibling_key: Optional[str] = None):
         self.entries.setdefault(shape_class, {})[kernel] = asdict(profile)
+        if sibling_key is not None:
+            sibs = self.siblings.setdefault(sibling_key, [])
+            if shape_class not in sibs:
+                sibs.append(shape_class)
         self._dirty = True
 
     def save(self):
@@ -391,10 +420,13 @@ class ProfileDB:
         if not self._dirty:
             return
         self._hosts[self.host] = self.entries
+        if self.siblings:
+            self._host_siblings[self.host] = self.siblings
         self.path.parent.mkdir(parents=True, exist_ok=True)
         # durable commit: the DB is the cross-decide()/cross-model profile
         # substrate — a torn file would silently force a full reprofile
         atomic_write_text(self.path, json.dumps({
-            "version": self.VERSION, "hosts": self._hosts}, indent=1),
+            "version": self.VERSION, "hosts": self._hosts,
+            "siblings": self._host_siblings}, indent=1),
             durable=True)
         self._dirty = False

@@ -107,6 +107,39 @@ def shape_class_key(
     return hashlib.sha1(blob.encode()).hexdigest()[:20]
 
 
+def shape_class_sibling_key(
+    spec: LayerSpec,
+    *,
+    input_shape: Optional[Tuple[int, ...]] = None,
+    input_dtype: Optional[str] = None,
+    weight_dtypes: Optional[Dict[str, str]] = None,
+) -> Optional[str]:
+    """Batch-agnostic relative of :func:`shape_class_key`: the leading
+    (batch) dim of the input avatar is replaced by a sentinel, so classes
+    identical up to batch size share one sibling key. The ProfileDB uses it
+    for *approximate* profile fan-out (``approx=True``): a layer profiled
+    at batch 1 seeds the candidate costs for the same layer at batch 4 —
+    per-element op costs barely shift with batch on these graphs, and a
+    stale estimate only mis-ranks candidates, never breaks correctness.
+
+    ``None`` when there is no input avatar to widen (nothing to
+    approximate over) or for stateless units (never shared)."""
+    if spec.op_type == "stateless" or input_shape is None or not input_shape:
+        return None
+    payload: List[Any] = [
+        spec.op_type,
+        [[k, list(spec.weight_shapes[k])] for k in sorted(spec.weight_shapes)],
+        _canon(spec.config),
+    ]
+    payload.append([
+        ["B"] + list(input_shape[1:]),
+        input_dtype,
+        _canon(weight_dtypes) if weight_dtypes else None,
+    ])
+    blob = json.dumps(payload, sort_keys=False, separators=(",", ":"))
+    return "~" + hashlib.sha1(blob.encode()).hexdigest()[:20]
+
+
 class Kernel:
     name: str = "base"
     op_type: str = "generic"

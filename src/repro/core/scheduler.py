@@ -48,6 +48,10 @@ class Plan:
     little_queues: List[List[int]]        # per little core: layer indices
     est_makespan: float
     est_breakdown: Dict[str, float] = field(default_factory=dict)
+    # I/O queue depth for the async engine's read submissions (planned by
+    # plan_read_depth from the same profiled costs as the read-vs-stage
+    # split; 1 = sync-equivalent)
+    read_depth: int = 1
 
     def to_dict(self):
         return {
@@ -55,6 +59,7 @@ class Plan:
             "big_prep": self.big_prep,
             "little_queues": self.little_queues,
             "est_makespan": self.est_makespan,
+            "read_depth": self.read_depth,
         }
 
     @staticmethod
@@ -64,7 +69,39 @@ class Plan:
             big_prep=list(d["big_prep"]),
             little_queues=[list(q) for q in d["little_queues"]],
             est_makespan=d["est_makespan"],
+            # plan.json written before the async engine landed: depth 1
+            read_depth=int(d.get("read_depth", 1)),
         )
+
+
+def plan_read_depth(
+    read_costs: Sequence[float],
+    other_prep_costs: Sequence[float],
+    *,
+    io_interference: float = 1.0,
+    max_depth: int = 8,
+) -> int:
+    """Queue depth the async engine should keep reads at, from the same
+    profiled per-layer costs the read-vs-stage split is planned from.
+
+    The prep pipeline alternates read (disk) with transform+stage (CPU)
+    per layer.  When total read time dominates the CPU-side prep work,
+    the disk goes idle between submissions unless reads run ahead at
+    depth; when CPU work dominates, depth buys nothing — one outstanding
+    read is always ready before the CPU needs it.  So the planned depth
+    is the ratio of (interference-scaled) read time to the CPU time that
+    can overlap it, clamped to [1, max_depth].  §3.2's measured
+    ``io_interference`` factor scales the read side: co-running preps
+    slow each other's I/O down, which *raises* the depth needed to keep
+    the device saturated.  Deterministic, so plan.json round-trips it.
+    """
+    total_read = float(sum(read_costs)) * max(float(io_interference), 1.0)
+    total_other = float(sum(other_prep_costs))
+    if total_read <= 0.0:
+        return 1
+    floor = total_read / max(int(max_depth), 1)
+    depth = math.ceil(total_read / max(total_other, floor, 1e-12))
+    return max(1, min(int(max_depth), int(depth)))
 
 
 # ---------------------------------------------------------------------------

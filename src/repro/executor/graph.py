@@ -54,6 +54,9 @@ class Task:
     fn: Optional[Callable[[], None]] = None
     deadline_s: Optional[float] = None  # per-task deadline; None = inherit
                                         # the job-level default (pool watchdog)
+    depth: int = 1                  # read tasks: planned I/O queue depth —
+                                    # how many lane successors to submit
+                                    # alongside this read (Plan.read_depth)
 
 
 class TaskGraph:
@@ -134,6 +137,7 @@ def compile_plan(
     prep_costs: Optional[Dict[str, float]] = None,
     stage_in_prep: bool = True,
     deferred_stage_affinity: str = "any",
+    read_depth: Optional[int] = None,
 ) -> TaskGraph:
     """Compile a scheduling ``Plan`` into a typed task graph.
 
@@ -143,8 +147,13 @@ def compile_plan(
     chain on the same core; otherwise it is emitted with
     ``deferred_stage_affinity`` (``any`` = prefetch: whoever idles first,
     including the big core right before the layer's execute; ``big`` =
-    strictly inline on the big cores)."""
+    strictly inline on the big cores).
+
+    ``read_depth`` (default: the plan's) stamps every read task with the
+    I/O queue depth the async engine should sustain — the runtime's read
+    op submits that many lane successors before reaping its own layer."""
     prep_costs = prep_costs or {}
+    depth = max(1, int(plan.read_depth if read_depth is None else read_depth))
     g = TaskGraph()
     placement: Dict[str, Tuple[str, Optional[int]]] = {}
     for i in plan.big_prep:
@@ -157,6 +166,7 @@ def compile_plan(
         aff, lane = placement.get(name, ("big", None))
         cost = float(prep_costs.get(name, 0.0))
         head = g.add(name, "read", affinity=aff, lane=lane, cost=cost)
+        head.depth = depth
         prev = head
         if not use_cache.get(name, False):
             prev = g.add(name, "transform", affinity=aff, lane=lane,

@@ -86,7 +86,9 @@ class Job:
         self.retries = 0                      # transient-fault retries used
         self.fault_events: List[dict] = []    # per-run fault/retry story
         self.on_preps_done: List[Callable[["Job"], None]] = []
+        self.on_done: List[Callable[["Job"], None]] = []
         self._cb_lock = threading.Lock()
+        self._done_cb_fired = False
 
         n = len(graph.tasks)
         self._state = [_PENDING] * n
@@ -226,6 +228,33 @@ class Job:
         for cb in cbs:
             cb(self)
 
+    def add_done_callback(self, cb: Callable[["Job"], None]) -> None:
+        """Register a job-completion callback (success, failure, or
+        watchdog expiry alike); runs immediately if the job already
+        finished. The executor uses this to recycle async-read buffers —
+        task values are held until job end for retry idempotency, so this
+        is the first moment recycling is safe. Same race-free registration
+        discipline as ``add_preps_callback``."""
+        with self._cb_lock:
+            if not self._done_cb_fired:
+                self.on_done.append(cb)
+                return
+        cb(self)
+
+    def _fire_done(self):
+        """Fire done-callbacks then set the event — every completion path
+        (worker finish, failure cancel, watchdog expiry, empty graph) goes
+        through here, outside the pool lock."""
+        with self._cb_lock:
+            self._done_cb_fired = True
+            cbs = list(self.on_done)
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:
+                pass  # cleanup callbacks must not mask the job's outcome
+        self.done.set()
+
 
 def _pop_eligible(job: Job, lst: List[int], now: float) -> Optional[int]:
     """Pop the lowest eligible tid (backoff ``not_before`` respected)."""
@@ -325,13 +354,15 @@ class CorePool:
                     target=self._watchdog_loop, daemon=True,
                     name=f"{self.name}-watchdog")
                 self._watchdog.start()
-            if job._finished():          # empty graph
+            empty = job._finished()      # empty graph
+            if empty:
                 job.total_s = time.perf_counter() - job.t0
-                job.done.set()
                 self.jobs_completed += 1
             else:
                 self._jobs.append(job)
                 self._cv.notify_all()
+        if empty:
+            job._fire_done()
         return job
 
     def shutdown(self, timeout: float = 5.0, *,
@@ -569,7 +600,7 @@ class CorePool:
         if fire_preps:
             job._fire_preps_callbacks()
         if finished:
-            job.done.set()
+            job._fire_done()
 
     # -- watchdog ------------------------------------------------------------
     def _watchdog_loop(self):
@@ -592,7 +623,7 @@ class CorePool:
                 if fire_preps:
                     job._fire_preps_callbacks()
                 if finished:
-                    job.done.set()
+                    job._fire_done()
 
     def _expire_locked(self, rec: dict, now: float,
                        actions: List[Tuple[Job, bool, bool]]):

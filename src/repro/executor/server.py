@@ -16,7 +16,14 @@ under the server root) and shares across all of them:
   * an **LRU residency budget**: finished cold starts leave their staged
     weights device-resident for warm reuse; when the total exceeds
     ``memory_budget_bytes`` the least-recently-used model's weights are
-    evicted (its next request is simply cold again).
+    evicted (its next request is simply cold again);
+  * the process-wide **async I/O engine** (``repro.ioengine``): every
+    engine's prep reads flow through one submit/reap queue, so the server
+    can cap *bytes in flight* across all co-admitted cold starts
+    (``max_read_bytes_in_flight``) — the byte-granular complement to the
+    job-granular prep-slot semaphore — and use the engine's idle signal
+    (no reads in flight) to run bounded incremental store compaction
+    exactly when the disk has nothing better to do.
 """
 from __future__ import annotations
 
@@ -84,6 +91,10 @@ class ColdServer:
         share_profile_db: bool = True,
         quarantine_base_s: float = 0.5,
         quarantine_max_s: float = 30.0,
+        io_engine: Any = "auto",
+        max_read_bytes_in_flight: Optional[int] = None,
+        idle_compaction: bool = True,
+        idle_compaction_min_interval_s: float = 0.25,
     ):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -108,7 +119,30 @@ class ColdServer:
         self._model_quarantine: Dict[str, Dict[str, float]] = {}
         self.stats = {"admitted": 0, "evictions": 0, "active_preps": 0,
                       "max_active_preps": 0, "cold_starts": 0,
-                      "load_failures": 0, "quarantined": 0}
+                      "load_failures": 0, "quarantined": 0,
+                      "idle_compactions": 0, "idle_compaction_bytes": 0}
+        # shared async I/O engine: byte-budget admission + idle compaction.
+        # "auto" binds the process-wide engine; False/None runs without one
+        # (engines fall back to their own resolution / the sync path).
+        if io_engine == "auto":
+            from repro.ioengine import get_io_engine
+
+            self.io_engine = get_io_engine()
+        else:
+            self.io_engine = io_engine or None
+        if self.io_engine is not None and max_read_bytes_in_flight is not None:
+            self.io_engine.set_max_bytes_in_flight(max_read_bytes_in_flight)
+        # idle-tick incremental compaction: when the engine's read queue
+        # drains, give ONE store (round-robin) one bounded background
+        # maintain() pass — dead super-bundle extents get reclaimed in the
+        # gaps between cold starts instead of stalling a decide()
+        self._idle_min_interval = float(idle_compaction_min_interval_s)
+        self._idle_last = 0.0
+        self._idle_rr = 0
+        self._idle_busy = False
+        self._idle_compaction = bool(idle_compaction)
+        if self.io_engine is not None and idle_compaction:
+            self.io_engine.add_idle_callback(self._on_io_idle)
 
     # -- model management ---------------------------------------------------
     def add_model(self, name: str, layers: List[LayerDef],
@@ -118,6 +152,8 @@ class ColdServer:
         engine_kw.setdefault("pool", self.pool)
         if self.profile_db is not None:
             engine_kw.setdefault("profile_db", self.profile_db)
+        if self.io_engine is not None:
+            engine_kw.setdefault("io_engine", self.io_engine)
         eng = ColdEngine(layers, self.root / name, **engine_kw)
         self.engines[name] = eng
         return eng
@@ -166,6 +202,63 @@ class ColdServer:
         with self._lock:
             self.stats["active_preps"] -= 1
         self._admission.release()
+        # the engine's idle edge usually lands while this job's transform/
+        # stage tail is still running (active_preps > 0, tick skipped) —
+        # re-check when the prep phase itself ends
+        if self.io_engine is not None and self._idle_compaction \
+                and self.io_engine.reads_in_flight() == 0:
+            self._on_io_idle()
+
+    # -- idle-tick incremental compaction ------------------------------------
+    def _on_io_idle(self):
+        """Engine idle signal (reads in flight hit zero): run ONE bounded
+        background ``maintain()`` pass on the next store, round-robin, that
+        has reclaimable dead extents. Rate-limited so a bursty
+        submit/drain/submit pattern cannot thrash compactions; skipped
+        entirely while a previous idle compaction is still running or any
+        cold start is mid-prep (its reads resume in a moment — the disk is
+        not actually idle)."""
+        now = time.monotonic()
+        with self._lock:
+            if (self._idle_busy or self.stats["active_preps"] > 0
+                    or now - self._idle_last < self._idle_min_interval):
+                return
+            self._idle_busy = True
+            names = list(self.engines)
+            rr = self._idle_rr
+        # off the engine's completion thread: a compaction must never delay
+        # the reap of reads submitted right after the idle edge
+        threading.Thread(target=self._idle_tick, args=(names, rr),
+                         name="repro-idle-compact", daemon=True).start()
+
+    def _idle_tick(self, names: List[str], rr: int):
+        reclaimed = 0
+        ticked = False
+        try:
+            for off in range(len(names)):
+                name = names[(rr + off) % len(names)]
+                store = self.engines[name].store
+                try:
+                    out = store.maintain(background=True)
+                    # bounded per tick: at most one store's compaction, and
+                    # we join it here so "busy" covers the whole pass
+                    joined = store.maintain_wait()
+                except Exception:
+                    continue  # sick store: quarantine handles it elsewhere
+                if out.get("compacted"):
+                    reclaimed = int((joined or out).get(
+                        "reclaimed_bytes", 0))
+                    ticked = True
+                    rr = (rr + off + 1) % len(names)
+                    break
+        finally:
+            with self._lock:
+                self._idle_busy = False
+                self._idle_last = time.monotonic()
+                self._idle_rr = rr
+                if ticked:
+                    self.stats["idle_compactions"] += 1
+                    self.stats["idle_compaction_bytes"] += reclaimed
 
     # -- model quarantine ---------------------------------------------------
     def _record_model_failure(self, name: str, exc: BaseException) -> None:
@@ -199,6 +292,8 @@ class ColdServer:
                                in self._model_quarantine.items()},
             }
         snap["pool"] = dict(getattr(self.pool, "health", {}) or {})
+        if self.io_engine is not None:
+            snap["io_engine"] = self.io_engine.snapshot()
         return snap
 
     def run(self, name: str, x) -> RunResult:

@@ -186,6 +186,8 @@ DEFAULT_RETRY = RetryPolicy()
 SITE_FAULTS = {
     "store.read_raw": ReadFault,
     "store.read_cached": ReadFault,
+    "ioengine.submit": ReadFault,
+    "ioengine.reap": ReadFault,
     "task.read": ReadFault,
     "task.transform": TransformFault,
     "task.stage": StageFault,
