@@ -1,0 +1,195 @@
+"""Front-door chaos + priority benchmark — the supervision tier's CI gate.
+
+Arms:
+  * failover — two supervised worker processes; a cold-start request is
+    dispatched and its worker is SIGKILLed mid-flight. Gates: the request
+    fails over to the sibling and completes within its deadline, the
+    output is bit-identical to an isolated single-server cold start, the
+    victim restarts under the exponential-backoff policy and serves
+    again, and nothing leaks (no stuck in-flight entries, queues empty).
+  * priority — worker slots saturated with batch-lane requests; an
+    interactive request must dispatch ahead of the backlog with bounded
+    queue delay, and over-deadline requests are shed with typed
+    ``DeadlineExceeded`` BEFORE consuming a worker slot (dispatch
+    counters unchanged).
+
+``--smoke`` hard-fails on any gate; CI runs it on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from benchmarks.common import csv_line  # noqa: F401  (import-path probe)
+except ImportError:  # invoked as `python benchmarks/serving_frontdoor.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from repro.executor.frontdoor import BATCH, INTERACTIVE, FrontDoor
+from repro.executor.server import ColdServer
+from repro.faults import DeadlineExceeded
+from repro.models.cnn import build_cnn
+
+WORKER_ARGS = {"n_little": 2, "n_big": 1}
+
+
+def _gate(ok: bool, msg: str, failures: list):
+    print(("PASS " if ok else "FAIL ") + msg)
+    if not ok:
+        failures.append(msg)
+
+
+def run_failover(failures: list, *, image=32, width=0.5):
+    root = tempfile.mkdtemp(prefix="nnv12_frontdoor_")
+    layers, x = build_cnn("mobilenet", image=image, width=width)
+
+    iso = ColdServer(root + "/iso", n_little=2)
+    iso.add_model("mnet", layers)
+    iso.decide("mnet", x, n_little=2)
+    ref = np.asarray(iso.cold_start("mnet", x).result().output)
+
+    fd = FrontDoor(root + "/fd", n_workers=2, worker_args=WORKER_ARGS)
+    fd.start()
+    try:
+        fd.add_model("mnet", "repro.models.cnn:build_cnn",
+                     name="mobilenet", image=image, width=width)
+
+        deadline = 120.0
+        req = fd.request("mnet", x, deadline_s=deadline)
+        for _ in range(1000):        # wait for dispatch so we know the victim
+            if req.worker is not None:
+                break
+            time.sleep(0.002)
+        victim = req.worker
+        _gate(victim is not None, "failover: request dispatched", failures)
+        t_kill = time.monotonic()
+        fd.kill_worker(victim)       # SIGKILL mid cold start
+
+        res = req.result(timeout=deadline)
+        t_recover = time.monotonic() - t_kill
+        _gate(res["worker"] != victim,
+              f"failover: sibling {res['worker']} served after {victim} "
+              f"was SIGKILLed ({t_recover:.2f}s after kill)", failures)
+        _gate(t_recover < deadline,
+              f"failover: completed within the {deadline:.0f}s deadline",
+              failures)
+        diff = float(np.abs(np.asarray(res["output"]) - ref).max())
+        _gate(diff == 0.0,
+              f"failover: output bit-identical to isolated cold start "
+              f"(max diff {diff:.1e})", failures)
+
+        h = fd.health()
+        for _ in range(600):         # restart fires under backoff
+            if h["workers"][victim]["alive"]:
+                break
+            time.sleep(0.05)
+            h = fd.health()
+        wv = h["workers"][victim]
+        _gate(wv["alive"] and h["stats"]["worker_restarts"] >= 1,
+              f"failover: {victim} restarted (restarts={wv['restarts']})",
+              failures)
+        expect = fd.restart.delay(wv["restarts"])
+        _gate(abs(wv["last_restart_delay"] - expect) < 1e-9,
+              f"failover: restart waited the policy backoff "
+              f"({wv['last_restart_delay']:.2f}s)", failures)
+
+        res2 = fd.request("mnet", x, deadline_s=deadline).result(deadline)
+        diff2 = float(np.abs(np.asarray(res2["output"]) - ref).max())
+        _gate(diff2 == 0.0, "failover: fleet serves bit-identical after "
+              "restart", failures)
+
+        h = fd.health()
+        leaked = (sum(w["in_flight"] for w in h["workers"].values())
+                  + sum(h["queues"].values()) + h["batch_in_flight"])
+        _gate(leaked == 0,
+              f"failover: nothing leaked (in-flight+queued={leaked})",
+              failures)
+        print(f"  failovers={h['stats']['failovers']} "
+              f"restarts={h['stats']['worker_restarts']} "
+              f"recover_s={t_recover:.2f}")
+    finally:
+        fd.shutdown()
+
+
+def run_priority(failures: list, *, image=16, width=0.25, n_batch=8):
+    root = tempfile.mkdtemp(prefix="nnv12_frontdoor_prio_")
+    fd = FrontDoor(root + "/fd", n_workers=2, max_inflight_per_worker=1,
+                   interactive_reserve=1, worker_args=WORKER_ARGS)
+    fd.start()
+    try:
+        fd.add_model("mnet", "repro.models.cnn:build_cnn",
+                     name="mobilenet", image=image, width=width)
+        _, x = build_cnn("mobilenet", image=image, width=width)
+        fd.request("mnet", x).result(120)    # warm workers + seed the EWMA
+
+        batch = [fd.request("mnet", x, lane=BATCH) for _ in range(n_batch)]
+        time.sleep(0.05)                     # let the batch lane saturate
+        t0 = time.monotonic()
+        inter = fd.request("mnet", x, lane=INTERACTIVE)
+        inter.result(120)
+        delay = time.monotonic() - t0
+        for b in batch:
+            b.result(120)
+        svc = fd._svc_ewma["mnet"]
+        bound = max(0.5, 5 * svc)            # ~one service time + slack,
+        #                                      NOT the n_batch*svc backlog
+        _gate(delay < bound,
+              f"priority: interactive delay {delay*1e3:.0f}ms bounded "
+              f"(< {bound*1e3:.0f}ms) under {n_batch} queued batch "
+              f"requests", failures)
+
+        h0 = fd.health()["stats"]
+        for tag, kw in (("rpc-floor", {"deadline_s": 1e-4}),
+                        ("queue-est", {"deadline_s": max(0.05, 0.5 * svc),
+                                       "lane": BATCH})):
+            if tag == "queue-est":           # rebuild a saturating backlog
+                flood = [fd.request("mnet", x, lane=BATCH)
+                         for _ in range(4 * n_batch)]
+            try:
+                fd.request("mnet", x, **kw)
+                shed = False
+            except DeadlineExceeded:
+                shed = True
+            _gate(shed, f"priority: over-deadline request shed typed "
+                  f"({tag})", failures)
+            if tag == "queue-est":
+                for b in flood:
+                    b.result(120)
+        h1 = fd.health()["stats"]
+        _gate(h1["shed_deadline"] - h0["shed_deadline"] >= 2
+              and (h1["dispatched_interactive"] + h1["dispatched_batch"]
+                   - h0["dispatched_interactive"] - h0["dispatched_batch"])
+              == 4 * n_batch,
+              "priority: shed requests never consumed a dispatch slot",
+              failures)
+        print(f"  interactive_delay_ms={delay*1e3:.0f} "
+              f"svc_ewma_ms={svc*1e3:.1f} "
+              f"shed={h1['shed_deadline']}")
+    finally:
+        fd.shutdown()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + hard-fail gates (CI)")
+    args = ap.parse_args(argv)
+    failures: list = []
+    run_failover(failures, **({"image": 24, "width": 0.4}
+                              if args.smoke else {}))
+    run_priority(failures)
+    if failures:
+        print(f"\n{len(failures)} gate(s) failed:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        if args.smoke:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

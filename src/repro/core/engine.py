@@ -121,6 +121,10 @@ class ColdEngine:
         self._jitted_cache: Dict[tuple, Dict[str, Callable]] = {}
         self._sc_by_layer: Dict[str, str] = {}
         self._sib_by_sc: Dict[str, Optional[str]] = {}
+        # shape classes whose decide() profiles came from a drifted-host
+        # ProfileDB entry: sc -> representative layer index, consumed by
+        # background re-profiling (reprofile_stale, the server idle tick)
+        self._stale_reps: Dict[str, int] = {}
         self._transform_avatars: Dict[Tuple[str, str], Dict[str, Any]] = {}
         # persist raw weights (the on-device model files)
         for l in layers:
@@ -346,6 +350,15 @@ class ColdEngine:
         if db is not None:
             db.save()
         profile_calls = prof.calls
+        # host-fingerprint drift: classes resolved from a stale (drifted)
+        # DB entry keep serving — record their representatives so the idle
+        # tick can re-measure off the cold path (reprofile_stale)
+        if db is not None and db.stale:
+            for sc, idxs in groups.items():
+                if any((sc, k) in db.stale for k in
+                       (kern.name for kern in
+                        self._kernels_for(self.layers[idxs[0]].spec))):
+                    self._stale_reps[sc] = idxs[0]
 
         # fan profiles out to every member layer; candidate sweeps (incl.
         # the Pareto filter) collapse to one per shape class
@@ -465,6 +478,8 @@ class ColdEngine:
             "profile_db_hits": db_hits,
             "profile_db_approx_hits": (
                 db.stats["approx_hits"] if db is not None else 0),
+            "profile_db_stale_hits": (
+                db.stats.get("stale_hits", 0) if db is not None else 0),
             "store_maintenance": maintenance,
             "replan_cleared": replan_cleared,
             "choices": {l.spec.name: (c.kernel, c.use_cache)
@@ -476,6 +491,42 @@ class ColdEngine:
 
     def _kernel_by_name(self, spec: LayerSpec, name: str) -> Kernel:
         return next(k for k in self._kernels_for(spec) if k.name == name)
+
+    # -- background re-profiling on host-fingerprint drift -------------------
+    def reprofile_stale(self, max_classes: Optional[int] = None) -> int:
+        """Re-measure shape classes whose last ``decide()`` was served by a
+        drifted-host ProfileDB entry. Runs on the server's IDLE tick — never
+        on the cold path: the stale estimates keep serving until the fresh
+        measurements land in the DB (picked up by the next ``decide()``).
+        Returns the number of classes refreshed."""
+        db = self.profile_db
+        if db is None or not self._stale_reps or self._layer_inputs is None:
+            return 0
+        done = 0
+        prof = self.profiler_factory(self.store)
+        try:
+            for sc, rep_idx in list(self._stale_reps.items()):
+                if max_classes is not None and done >= max_classes:
+                    break
+                rep = self.layers[rep_idx]
+                xin = self._layer_inputs[rep_idx]
+                sib = self._sib_by_sc.get(sc)
+                for kern in self._kernels_for(rep.spec):
+                    if (sc, kern.name) not in db.stale:
+                        continue
+                    p = prof.profile(rep.spec, kern, xin)
+                    db.put(sc, kern.name, p, sibling_key=sib)
+                del self._stale_reps[sc]
+                done += 1
+                self.repairs.record(
+                    "reprofile_drift", layer=rep.spec.name,
+                    shape_class=sc[:40],
+                    drifted_from=getattr(db, "drifted_from", None))
+        finally:
+            prof.close()
+        if done:
+            db.save()
+        return done
 
     def _raw_fingerprint(self, l: LayerDef) -> str:
         """Content hash of a layer's raw weights — guards cached transformed
@@ -695,11 +746,15 @@ class ColdEngine:
         return rt
 
     def submit_cold(self, x, *, n_little: int = 3, work_stealing: bool = True,
-                    graph_hook=None) -> PipelineJob:
+                    graph_hook=None,
+                    deadline_s: Optional[float] = None) -> PipelineJob:
         """Non-blocking cold run: compile the plan's task graph and enqueue
-        it on the shared pool (the ColdServer's admission path)."""
+        it on the shared pool (the ColdServer's admission path).
+        ``deadline_s`` bounds the whole run end-to-end (typed
+        ``DeadlineExceeded`` from the pool watchdog once blown)."""
         rt = self._runtime(n_little=n_little, work_stealing=work_stealing)
-        return rt.submit(jnp.asarray(x), self.plan, graph_hook=graph_hook)
+        return rt.submit(jnp.asarray(x), self.plan, graph_hook=graph_hook,
+                         job_deadline_s=deadline_s)
 
     def run_cold(self, x, *, n_little: int = 3, mode: str = "nnv12") -> RunResult:
         """mode: nnv12 (full) | sequential (ncnn-like baseline) |

@@ -311,12 +311,16 @@ class PipelineRuntime:
         return w
 
     # -- graph compilation + submission -------------------------------------
-    def submit(self, x, plan: Plan, *, graph_hook=None) -> PipelineJob:
+    def submit(self, x, plan: Plan, *, graph_hook=None,
+               job_deadline_s: Optional[float] = None) -> PipelineJob:
         """Compile the plan into a task graph and hand it to the persistent
         pool; returns immediately with a :class:`PipelineJob`.
 
         ``graph_hook(graph, weights, lock)`` may append extra tasks (e.g.
-        the LLM bridge's decode-path packing) before submission."""
+        the LLM bridge's decode-path packing) before submission.
+        ``job_deadline_s`` is the run's END-TO-END budget: the pool
+        watchdog fails the job with a typed ``DeadlineExceeded`` once it is
+        blown (the front door's deadline propagation lands here)."""
         t0 = time.perf_counter()
         weights: Dict[str, Any] = {
             n: {} for n in self.order if not self.specs[n].weight_shapes}
@@ -453,7 +457,8 @@ class PipelineRuntime:
         job = self._get_pool().submit(
             graph, name=f"cold:{self.order[0]}..{self.order[-1]}",
             allow_steal=self.work_stealing, t0=t0,
-            retry=self.retry, deadline_s=self.deadline_s)
+            retry=self.retry, deadline_s=self.deadline_s,
+            job_deadline_s=job_deadline_s)
         if reads is not None:
             # engine buffers recycle only once no retry/zombie can still
             # reap them — i.e. when the job is finished for good

@@ -362,7 +362,19 @@ class ProfileDB:
         # lookups resolve through it AFTER the exact key misses.
         self._host_siblings: Dict[str, Dict[str, List[str]]] = {}
         self.siblings: Dict[str, List[str]] = {}
-        self.stats = {"hits": 0, "misses": 0, "approx_hits": 0}
+        # host-fingerprint drift: when this host has NO entries but another
+        # fingerprint in the same file does (same machine after a jax
+        # upgrade / CPU-count change), that host's entries are kept as
+        # STALE fallbacks — ``get`` serves them (so the cold path never
+        # pays in-line re-profiling for a fingerprint bump) and records the
+        # key in ``self.stale`` so background re-profiling (the server's
+        # idle tick → ``ColdEngine.reprofile_stale``) can refresh them off
+        # the request path. ``put`` un-stales a key.
+        self._stale_entries: Dict[str, Dict[str, dict]] = {}
+        self.stale: set = set()          # (shape_class, kernel) served stale
+        self.drifted_from: Optional[str] = None
+        self.stats = {"hits": 0, "misses": 0, "approx_hits": 0,
+                      "stale_hits": 0}
         self._dirty = False
         self._load()
 
@@ -380,6 +392,17 @@ class ProfileDB:
         # optional key: DB files from before the sibling index load fine
         self._host_siblings = raw.get("siblings", {})
         self.siblings = self._host_siblings.get(self.host, {})
+        if not self.entries:
+            # fingerprint drift: adopt the richest other host's entries as
+            # stale estimates (measurements of the right shapes on almost
+            # this machine beat re-profiling on the cold path)
+            donors = [h for h in self._hosts if h != self.host
+                      and self._hosts[h]]
+            if donors:
+                self.drifted_from = max(
+                    donors, key=lambda h: sum(len(v) for v
+                                              in self._hosts[h].values()))
+                self._stale_entries = self._hosts[self.drifted_from]
 
     def get(self, shape_class: str, kernel: str, *,
             sibling_key: Optional[str] = None,
@@ -393,6 +416,15 @@ class ProfileDB:
         d = self.entries.get(shape_class, {}).get(kernel)
         if d is not None:
             self.stats["hits"] += 1
+            return OpProfile(**d)
+        # stale (drifted-host) exact entry: same shapes, almost this host —
+        # served so decide() stays off the profiler, marked for background
+        # refresh. Checked before the approx rung: an exact-shape stale
+        # measurement beats a fresh sibling estimate.
+        d = self._stale_entries.get(shape_class, {}).get(kernel)
+        if d is not None:
+            self.stats["stale_hits"] += 1
+            self.stale.add((shape_class, kernel))
             return OpProfile(**d)
         if approx and sibling_key is not None:
             for sc in self.siblings.get(sibling_key, ()):
@@ -408,11 +440,18 @@ class ProfileDB:
     def put(self, shape_class: str, kernel: str, profile: OpProfile, *,
             sibling_key: Optional[str] = None):
         self.entries.setdefault(shape_class, {})[kernel] = asdict(profile)
+        # a fresh measurement supersedes the drifted-host fallback
+        self.stale.discard((shape_class, kernel))
         if sibling_key is not None:
             sibs = self.siblings.setdefault(sibling_key, [])
             if shape_class not in sibs:
                 sibs.append(shape_class)
         self._dirty = True
+
+    def stale_pending(self) -> List[tuple]:
+        """(shape_class, kernel) keys served stale and not yet re-measured —
+        the background re-profiling work list."""
+        return sorted(self.stale)
 
     def save(self):
         from repro.checkpoint import atomic_write_text

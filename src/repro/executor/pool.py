@@ -49,9 +49,10 @@ re-raises from ``Job.result()``/``wait()``.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.scheduler import pick_steal_donor
 from repro.executor.graph import OpTrace, PREP_KINDS, TaskGraph
@@ -62,6 +63,24 @@ from repro.faults import (
 
 _PENDING, _READY, _RUNNING, _DONE, _CANCELLED = range(5)
 
+#: platform support for per-thread CPU affinity (Linux). Everything pinning
+#: does is gated on this flag so other platforms get a clean no-op.
+_HAS_AFFINITY = hasattr(os, "sched_setaffinity") \
+    and hasattr(os, "sched_getaffinity")
+
+
+def _pin_current_thread(cpus: Set[int]) -> bool:
+    """Pin the calling thread to ``cpus``; False on any failure (no-op
+    fallback — pinning is a locality optimization, never a correctness
+    requirement)."""
+    if not _HAS_AFFINITY or not cpus:
+        return False
+    try:
+        os.sched_setaffinity(0, cpus)   # tid 0 = the calling thread
+        return True
+    except OSError:
+        return False
+
 
 _JOB_SEQ = itertools.count(1)
 
@@ -71,7 +90,8 @@ class Job:
 
     def __init__(self, graph: TaskGraph, name: str, t0: Optional[float],
                  allow_steal: bool, retry: Optional[RetryPolicy] = None,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 job_deadline_s: Optional[float] = None):
         self.seq = next(_JOB_SEQ)
         self.graph = graph
         self.name = name
@@ -79,6 +99,10 @@ class Job:
         self.allow_steal = allow_steal
         self.retry = retry if retry is not None else DEFAULT_RETRY
         self.deadline_s = deadline_s  # job-wide default task deadline
+        self.job_deadline_s = job_deadline_s  # end-to-end budget for the
+        #                                       WHOLE job (measured from t0);
+        #                                       the watchdog fails the job
+        #                                       typed once it is blown
         self.traces: List[OpTrace] = []
         self.total_s: float = 0.0
         self.done = threading.Event()
@@ -272,18 +296,28 @@ class CorePool:
 
     def __init__(self, n_big: int = 1, n_little: int = 3,
                  name: str = "corepool", *,
-                 watchdog_interval_s: float = 0.02):
+                 watchdog_interval_s: float = 0.02,
+                 pin_cores: bool = False):
         self.name = name
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._jobs: List[Job] = []
         self._shutdown = False
+        self._draining = False
         self.threads_created = 0
         self.jobs_completed = 0
         self.steals = 0
+        # big/little lane pinning (sched_setaffinity where available): big
+        # workers take the high-numbered cores, little lanes the low ones —
+        # the big.LITTLE enumeration convention — wrapping when workers
+        # outnumber cores. ``pinned`` records what each worker actually got
+        # (None = the clean no-op fallback fired).
+        self.pin_cores = bool(pin_cores)
+        self.pinned: Dict[str, Optional[List[int]]] = {}
         # fault-domain state
         self.health: Dict[str, int] = {
             "task_retries": 0, "deadline_expired": 0,
+            "job_deadline_expired": 0,
             "lanes_quarantined": 0, "workers_replaced": 0,
             "workers_lost": 0, "jobs_failed": 0,
         }
@@ -335,7 +369,8 @@ class CorePool:
     def submit(self, graph: TaskGraph, *, name: str = "job",
                allow_steal: bool = True, t0: Optional[float] = None,
                retry: Optional[RetryPolicy] = None,
-               deadline_s: Optional[float] = None) -> Job:
+               deadline_s: Optional[float] = None,
+               job_deadline_s: Optional[float] = None) -> Job:
         graph.validate()
         for t in graph.tasks:
             if t.fn is None:
@@ -343,12 +378,17 @@ class CorePool:
                     f"task {t.layer}/{t.kind} has no bound fn")
         lanes = graph.lanes()
         self.ensure(n_little=(max(lanes) + 1 if lanes else None), n_big=1)
-        job = Job(graph, name, t0, allow_steal, retry, deadline_s)
-        needs_watchdog = (deadline_s is not None or any(
-            t.deadline_s is not None for t in graph.tasks))
+        job = Job(graph, name, t0, allow_steal, retry, deadline_s,
+                  job_deadline_s)
+        needs_watchdog = (deadline_s is not None
+                          or job_deadline_s is not None
+                          or any(t.deadline_s is not None
+                                 for t in graph.tasks))
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("pool is shut down")
+            if self._draining:
+                raise RuntimeError("pool is draining")
             if needs_watchdog and self._watchdog is None:
                 self._watchdog = threading.Thread(
                     target=self._watchdog_loop, daemon=True,
@@ -364,6 +404,30 @@ class CorePool:
         if empty:
             job._fire_done()
         return job
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Graceful drain: stop accepting new jobs (``submit`` raises) and
+        wait for every in-flight job to finish. Returns True when the pool
+        drained inside ``timeout`` (False = something is still running —
+        the caller decides whether to escalate to ``shutdown``). Workers
+        stay alive; ``resume()`` reopens submission."""
+        with self._cv:
+            self._draining = True
+            jobs = list(self._jobs)
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        for job in jobs:
+            left = (None if deadline is None
+                    else max(deadline - time.monotonic(), 0.0))
+            if not job.done.wait(left):
+                return False
+        return True
+
+    def resume(self) -> None:
+        """Reopen submission after a ``drain`` (supervisor restart path)."""
+        with self._cv:
+            self._draining = False
+            self._cv.notify_all()
 
     def shutdown(self, timeout: float = 5.0, *,
                  raise_on_leak: bool = False) -> dict:
@@ -476,11 +540,43 @@ class CorePool:
                 job._state[tid] = _RUNNING
             self._run(job, tid, core, wkind, widx)
 
+    # -- big/little lane pinning (satellite: NUMA/core locality) -------------
+    def _cpuset_for(self, wkind: str, widx: int) -> Optional[Set[int]]:
+        """CPU set for one worker under the big.LITTLE split: the top half
+        of the allowed cores (at least one) serves big workers, the bottom
+        half the little lanes; indices wrap. None = pinning unavailable or
+        disabled (clean no-op)."""
+        if not self.pin_cores or not _HAS_AFFINITY:
+            return None
+        try:
+            cpus = sorted(os.sched_getaffinity(0))
+        except OSError:
+            return None
+        if len(cpus) < 2:
+            return None     # one core: pinning would only serialize lanes
+        n_big_cpus = max(1, len(cpus) // 2)
+        big_cpus = cpus[len(cpus) - n_big_cpus:]
+        little_cpus = cpus[:len(cpus) - n_big_cpus]
+        if wkind == "big":
+            return {big_cpus[widx % len(big_cpus)]}
+        return {little_cpus[widx % len(little_cpus)]}
+
+    def _apply_pin(self, wkind: str, widx: int) -> None:
+        """Called by each worker thread on entry (original and watchdog
+        replacements alike); records the outcome in ``self.pinned``."""
+        cpus = self._cpuset_for(wkind, widx)
+        ok = _pin_current_thread(cpus) if cpus is not None else False
+        with self._lock:
+            self.pinned[threading.current_thread().name] = (
+                sorted(cpus) if ok and cpus is not None else None)
+
     def _big_loop(self, i: int):
+        self._apply_pin("big", i)
         self._worker_loop("big" if i == 0 else f"big{i}",
                           self._next_for_big, "big", i)
 
     def _little_loop(self, j: int):
+        self._apply_pin("little", j)
         self._worker_loop(f"little{j}",
                           lambda now: self._next_for_little(j, now),
                           "little", j)
@@ -492,8 +588,9 @@ class CorePool:
         ``(fire_preps, finished)`` for the caller to act on OUTSIDE the
         lock."""
         task = job.graph.tasks[tid]
-        job.error = err
-        self.health["jobs_failed"] += 1
+        if job.error is None:    # a job expired by the watchdog keeps its
+            job.error = err      # typed DeadlineExceeded as THE error
+            self.health["jobs_failed"] += 1
         job.fault_events.append({
             "layer": task.layer, "kind": task.kind, "action": "fail",
             "error": type(err).__name__})
@@ -555,7 +652,7 @@ class CorePool:
                 self._cv.notify_all()
                 return
             if (err is not None and isinstance(err, TransientFault)
-                    and not self._shutdown
+                    and not self._shutdown and job.error is None
                     and job._attempts[tid] + 1 < job.retry.max_attempts):
                 # bounded in-place retry with backoff: the task goes back to
                 # its ready queue, eligible only after the backoff expires
@@ -617,6 +714,14 @@ class CorePool:
                             or now - rec["t0"] <= rec["deadline"]):
                         continue
                     self._expire_locked(rec, now, actions)
+                # end-to-end job deadlines: a job past its total budget
+                # fails typed NOW — the client gets its fast answer and
+                # (one tier up) the front door can shed or fail over
+                for job in list(self._jobs):
+                    if (job.job_deadline_s is not None
+                            and job.error is None
+                            and now - job.t0 > job.job_deadline_s):
+                        self._expire_job_locked(job, actions)
                 if actions:
                     self._cv.notify_all()
             for job, fire_preps, finished in actions:
@@ -694,6 +799,40 @@ class CorePool:
                 f"{rec['deadline']:.3f}s deadline", layer=task.layer)
             fire_preps, finished = self._fail_job_locked(job, tid, err)
             actions.append((job, fire_preps, finished))
+
+    def _expire_job_locked(self, job: Job,
+                           actions: List[Tuple[Job, bool, bool]]):
+        """Under the pool lock: fail a job whose END-TO-END deadline
+        (``job_deadline_s``, measured from ``t0``) is blown. Pending/ready
+        tasks are cancelled; tasks already running finish on their own (task
+        fns are value-idempotent, so letting them drain is harmless) and the
+        job's done event fires once the last one returns."""
+        job.error = DeadlineExceeded(
+            f"job {job.name!r} exceeded its end-to-end "
+            f"{job.job_deadline_s:.3f}s deadline")
+        self.health["jobs_failed"] += 1
+        self.health["job_deadline_expired"] += 1
+        job.fault_events.append({
+            "action": "job-deadline-fail", "error": "DeadlineExceeded",
+            "deadline_s": job.job_deadline_s})
+        for t2 in job.graph.tasks:
+            if job._state[t2.tid] in (_PENDING, _READY):
+                job._state[t2.tid] = _CANCELLED
+                job._done_count += 1
+        job._ready_big.clear()
+        job._ready_any.clear()
+        job._ready_little.clear()
+        fire_preps = False
+        # cancelled preps will never complete: release the admission slot
+        if not job._preps_fired:
+            job._preps_fired = True
+            fire_preps = True
+        finished = job._finished()
+        if finished:
+            self._jobs.remove(job)
+            self.jobs_completed += 1
+            job.total_s = time.perf_counter() - job.t0
+        actions.append((job, fire_preps, finished))
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,7 @@ from repro.core.engine import ColdEngine, LayerDef
 from repro.core.pipeline import PipelineJob, RunResult
 from repro.core.profiler import ProfileDB
 from repro.executor.pool import CorePool, get_core_pool
-from repro.faults import ModelQuarantined
+from repro.faults import DeadlineExceeded, ModelQuarantined
 
 
 def _weights_nbytes(weights: Optional[Dict[str, Any]]) -> int:
@@ -69,7 +69,13 @@ class ColdStart:
         try:
             res = self.job.result(timeout)
         except TimeoutError:
-            raise  # caller-side wait timeout, not a model failure
+            raise  # caller-side wait timeout (JobTimeout), not a model
+            #        failure — the admission slot releases when the job's
+            #        prep phase ends on its own
+        except DeadlineExceeded:
+            raise  # deadline pressure (watchdog expiry), not model
+            #        sickness: quarantining here would punish a healthy
+            #        model for an over-tight budget
         except Exception as e:
             self.server._record_model_failure(self.model, e)
             raise
@@ -120,7 +126,15 @@ class ColdServer:
         self.stats = {"admitted": 0, "evictions": 0, "active_preps": 0,
                       "max_active_preps": 0, "cold_starts": 0,
                       "load_failures": 0, "quarantined": 0,
-                      "idle_compactions": 0, "idle_compaction_bytes": 0}
+                      "idle_compactions": 0, "idle_compaction_bytes": 0,
+                      "idle_reprofiles": 0, "warm_runs": 0}
+        # graceful drain (front-door worker handoff): _draining refuses new
+        # admissions; _outstanding counts in-flight cold starts end-to-end
+        # (admission -> job done), so drain() can wait the tail out
+        self._draining = False
+        self._outstanding = 0
+        self._drain_cv = threading.Condition(self._lock)
+        self._served: Dict[str, int] = {}   # model -> completed requests
         # shared async I/O engine: byte-budget admission + idle compaction.
         # "auto" binds the process-wide engine; False/None runs without one
         # (engines fall back to their own resolution / the sync path).
@@ -164,12 +178,20 @@ class ColdServer:
 
     # -- serving ------------------------------------------------------------
     def cold_start(self, name: str, x, *, n_little: Optional[int] = None,
-                   graph_hook=None) -> ColdStart:
+                   graph_hook=None,
+                   deadline_s: Optional[float] = None) -> ColdStart:
         """Admit one cold-start request (blocks while ``max_concurrent_preps``
-        jobs are in their prep phase) and submit its task graph."""
+        jobs are in their prep phase) and submit its task graph.
+
+        ``deadline_s`` is the request's remaining end-to-end budget — it
+        becomes the job's watchdog deadline (typed ``DeadlineExceeded``
+        once blown), and a budget already too small to cover the queue is
+        shed HERE, before the admission semaphore is touched."""
         eng = self.engines[name]
         now = time.monotonic()
         with self._lock:
+            if self._draining:
+                raise RuntimeError(f"server draining: {name!r} refused")
             q = self._model_quarantine.get(name)
             if q is not None and now < q["until"]:
                 self.stats["quarantined"] += 1
@@ -178,25 +200,70 @@ class ColdServer:
                     f"model {name!r} quarantined after "
                     f"{int(q['fails'])} failed cold start(s); retry in "
                     f"{retry_after:.2f}s", retry_after=retry_after)
+        if deadline_s is not None and deadline_s <= 0:
+            raise DeadlineExceeded(
+                f"request for {name!r} arrived with no budget left "
+                f"({deadline_s:.3f}s) — shed before admission")
         # degradation ladder: a missing/corrupt offline decision falls back
         # to a validated plan.json reload or the default heuristic plan —
         # the request proceeds degraded instead of failing admission
         eng.ensure_plan(x, n_little=n_little or self.n_little)
+        t_admit = time.monotonic()
         self._admission.acquire()
+        # the admission wait itself consumed budget; what reaches the pool
+        # watchdog is the REMAINING slice (shed typed if it went negative)
+        if deadline_s is not None:
+            deadline_s -= time.monotonic() - t_admit
+            if deadline_s <= 0:
+                self._admission.release()
+                raise DeadlineExceeded(
+                    f"request for {name!r} spent its whole budget queued "
+                    f"at admission — shed before its prep started")
         with self._lock:
             self.stats["admitted"] += 1
             self.stats["cold_starts"] += 1
             self.stats["active_preps"] += 1
             self.stats["max_active_preps"] = max(
                 self.stats["max_active_preps"], self.stats["active_preps"])
+            self._outstanding += 1
+            self._served[name] = self._served.get(name, 0) + 1
         try:
             job = eng.submit_cold(x, n_little=n_little or self.n_little,
-                                  graph_hook=graph_hook)
+                                  graph_hook=graph_hook,
+                                  deadline_s=deadline_s)
         except BaseException:
             self._release_prep_slot()
+            self._request_done()
             raise
         job.job.add_preps_callback(lambda _job: self._release_prep_slot())
+        job.job.add_done_callback(lambda _job: self._request_done())
         return ColdStart(self, name, job)
+
+    def _request_done(self):
+        with self._drain_cv:
+            self._outstanding -= 1
+            self._drain_cv.notify_all()
+
+    # -- graceful drain (front-door worker handoff) --------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Refuse new admissions and wait for every in-flight cold start to
+        finish. True = fully drained; False = requests still running at
+        ``timeout`` (the supervisor escalates to a hard stop). Idempotent;
+        ``resume()`` reopens admission."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._drain_cv:
+            self._draining = True
+            while self._outstanding > 0:
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0:
+                    return False
+                self._drain_cv.wait(left)
+        return True
+
+    def resume(self) -> None:
+        with self._lock:
+            self._draining = False
 
     def _release_prep_slot(self):
         with self._lock:
@@ -234,6 +301,7 @@ class ColdServer:
     def _idle_tick(self, names: List[str], rr: int):
         reclaimed = 0
         ticked = False
+        reprofiled = 0
         try:
             for off in range(len(names)):
                 name = names[(rr + off) % len(names)]
@@ -251,6 +319,17 @@ class ColdServer:
                     ticked = True
                     rr = (rr + off + 1) % len(names)
                     break
+            # host-fingerprint drift: re-measure ONE stale shape class per
+            # idle tick (round-robin over engines) — profiling happens in
+            # the gaps between cold starts, never on the request path
+            for off in range(len(names)):
+                eng = self.engines[names[(rr + off) % len(names)]]
+                try:
+                    reprofiled = eng.reprofile_stale(max_classes=1)
+                except Exception:
+                    continue  # advisory refresh; the stale estimate serves
+                if reprofiled:
+                    break
         finally:
             with self._lock:
                 self._idle_busy = False
@@ -259,6 +338,8 @@ class ColdServer:
                 if ticked:
                     self.stats["idle_compactions"] += 1
                     self.stats["idle_compaction_bytes"] += reclaimed
+                if reprofiled:
+                    self.stats["idle_reprofiles"] += reprofiled
 
     # -- model quarantine ---------------------------------------------------
     def _record_model_failure(self, name: str, exc: BaseException) -> None:
@@ -284,12 +365,23 @@ class ColdServer:
             self._model_quarantine.pop(name, None)
 
     def health(self) -> Dict[str, Any]:
-        """One machine-readable snapshot of the server's fault domain."""
+        """One machine-readable snapshot of the server's fault domain AND
+        its residency — plain dict/list/scalar values only, so the snapshot
+        serializes over the front-door heartbeat channel and feeds its
+        cache-aware routing cost estimate (``resident`` = staged weights
+        device-resident → near-free warm run; ``served`` = this worker has
+        cold-started the model before → store/page cache warm)."""
         with self._lock:
             snap = {
                 "stats": dict(self.stats),
                 "quarantine": {n: dict(q) for n, q
                                in self._model_quarantine.items()},
+                "resident": list(self._resident),
+                "resident_bytes": sum(self._resident.values()),
+                "models": list(self.engines),
+                "served": dict(self._served),
+                "outstanding": int(self._outstanding),
+                "draining": bool(self._draining),
             }
         snap["pool"] = dict(getattr(self.pool, "health", {}) or {})
         if self.io_engine is not None:
@@ -312,6 +404,8 @@ class ColdServer:
             if weights is None:
                 return None
             self._resident.move_to_end(name)    # LRU touch
+            self.stats["warm_runs"] += 1
+            self._served[name] = self._served.get(name, 0) + 1
         eng = self.engines[name]
         rt = eng._runtime(n_little=self.n_little, work_stealing=True)
         t0 = time.perf_counter()

@@ -1,0 +1,165 @@
+"""Front-door worker entrypoint — one supervised ColdServer per process.
+
+``python -m repro.executor.worker --host H --port P --worker-id W ...``
+connects back to the front door's listener, says hello, and serves the
+RPC protocol from :mod:`repro.executor.frontdoor`: ``add_model`` builds
+the model from its ``module:function`` builder spec and registers it
+(reloading the shared profile DB first, so every worker resolves the
+same plan the first worker measured), ``cold_start`` serves a request
+(warm path first, then an admitted cold start under the propagated
+deadline), and a background thread heartbeats the server's serializable
+``health()`` snapshot. Faults cross back typed via ``describe()``.
+
+The process is designed to be killed: all state it owns (store, plan,
+profile entries) is either re-derivable or persisted, and the front door
+replays in-flight requests on a sibling.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import socket
+import sys
+import threading
+from pathlib import Path
+
+from repro.executor.frontdoor import recv_msg, send_msg
+from repro.faults import Fault
+
+
+def _build(spec):
+    mod_name, _, fn_name = spec["builder"].partition(":")
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    return fn(**(spec.get("kwargs") or {}))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--worker-id", required=True)
+    ap.add_argument("--root", required=True)
+    ap.add_argument("--profile-db", default=None)
+    ap.add_argument("--heartbeat-interval", type=float, default=0.2)
+    ap.add_argument("--n-little", type=int, default=2)
+    ap.add_argument("--n-big", type=int, default=1)
+    ap.add_argument("--max-concurrent-preps", type=int, default=2)
+    ap.add_argument("--pin-cores", action="store_true")
+    args = ap.parse_args(argv)
+
+    # imports deferred past argparse so --help stays instant
+    import numpy as np
+
+    from repro.core.profiler import ProfileDB
+    from repro.executor.pool import CorePool
+    from repro.executor.server import ColdServer
+
+    pool = CorePool(n_little=args.n_little, n_big=args.n_big,
+                    pin_cores=args.pin_cores)
+    server = ColdServer(args.root, pool=pool, n_little=args.n_little,
+                        max_concurrent_preps=args.max_concurrent_preps,
+                        share_profile_db=args.profile_db is None)
+    sock = socket.create_connection((args.host, args.port))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_lock = threading.Lock()
+    send_msg(sock, {"type": "hello", "worker": args.worker_id,
+                    "pid": os.getpid()}, send_lock)
+
+    examples = {}          # model -> x_example (for restart-side decide)
+    stop = threading.Event()
+
+    def heartbeat():
+        while not stop.wait(args.heartbeat_interval):
+            try:
+                send_msg(sock, {"type": "heartbeat",
+                                "worker": args.worker_id,
+                                "health": server.health()}, send_lock)
+            except OSError:
+                return  # front door gone: exit quietly
+
+    threading.Thread(target=heartbeat, name="worker-heartbeat",
+                     daemon=True).start()
+
+    def handle_add_model(msg):
+        name = msg["name"]
+        try:
+            if args.profile_db is not None:
+                # reload the SHARED db so measurements a sibling saved
+                # since our startup are visible — this is what makes every
+                # worker resolve the same plan (bit-identical failover)
+                server.profile_db = ProfileDB(Path(args.profile_db))
+            layers, x = _build(msg)
+            examples[name] = x
+            if name not in server.engines:
+                server.add_model(name, layers)
+            plan_path = server.root / name / "plan.json"
+            if plan_path.exists():   # restart: reuse the persisted plan
+                server.engines[name].ensure_plan(x, n_little=args.n_little)
+            else:
+                server.decide(name, x)
+            send_msg(sock, {"type": "model_ready", "name": name}, send_lock)
+        except Exception as e:
+            send_msg(sock, {"type": "error", "rid": None, "name": name,
+                            "fault": _fault_dict(e)}, send_lock)
+
+    def handle_cold_start(msg):
+        rid = msg["rid"]
+        try:
+            res = server.warm_run(msg["model"], msg["x"])
+            warm = res is not None
+            if res is None:
+                res = server.cold_start(
+                    msg["model"], msg["x"],
+                    deadline_s=msg.get("deadline_s")).result()
+            send_msg(sock, {"type": "result", "rid": rid,
+                            "worker": args.worker_id, "warm": warm,
+                            "output": np.asarray(res.output),
+                            "total_s": res.total_s}, send_lock)
+        except Exception as e:
+            try:
+                send_msg(sock, {"type": "error", "rid": rid,
+                                "fault": _fault_dict(e)}, send_lock)
+            except OSError:
+                pass
+
+    def _fault_dict(e):
+        if isinstance(e, Fault):
+            return e.describe()
+        return {"type": type(e).__name__, "msg": f"{type(e).__name__}: {e}"}
+
+    while True:
+        try:
+            msg = recv_msg(sock)
+        except Exception:
+            msg = None
+        if msg is None:
+            break   # front door hung up
+        t = msg.get("type")
+        if t == "add_model":
+            handle_add_model(msg)
+        elif t == "cold_start":
+            # own thread: cold starts block at admission and must not
+            # stall the recv loop (or each other)
+            threading.Thread(target=handle_cold_start, args=(msg,),
+                             name=f"worker-req-{msg.get('rid')}",
+                             daemon=True).start()
+        elif t == "drain":
+            ok = server.drain(timeout=msg.get("timeout_s"))
+            try:
+                send_msg(sock, {"type": "drained", "ok": ok}, send_lock)
+            except OSError:
+                break
+        elif t == "shutdown":
+            break
+    stop.set()
+    try:
+        sock.close()
+    except OSError:
+        pass
+    pool.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

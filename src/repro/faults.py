@@ -124,7 +124,15 @@ class PlanFault(PermanentFault):
 
 
 class WorkerLost(PermanentFault):
-    """A pool worker thread never came back (hung task leaked the thread)."""
+    """A worker never came back — a pool thread that leaked at shutdown, or
+    a front-door worker *process* that died / stopped heartbeating.
+
+    Permanent **within** the failure domain that raised it: the thread or
+    process is gone and retrying there cannot help. One tier up it becomes
+    recoverable — the ``FrontDoor`` supervisor catches ``WorkerLost`` for a
+    crashed worker and *fails the in-flight request over* to a sibling
+    (cold starts are idempotent by construction, so the replay is safe),
+    only surfacing it to the client when no sibling can serve."""
 
 
 #: OS errors that plausibly heal on retry. Everything else (ENOENT, EACCES,
@@ -176,6 +184,41 @@ class RetryPolicy:
 
 
 DEFAULT_RETRY = RetryPolicy()
+
+
+# ---------------------------------------------------------------------------
+# supervision policies (the front-door tier)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HeartbeatPolicy:
+    """Liveness contract between a supervisor and a worker process: the
+    worker beats every ``interval_s``; ``miss_threshold`` consecutive missed
+    beats (no message of any kind) declare it lost."""
+
+    interval_s: float = 0.2
+    miss_threshold: int = 5
+
+    @property
+    def timeout_s(self) -> float:
+        return self.interval_s * self.miss_threshold
+
+
+@dataclass(frozen=True)
+class RestartPolicy:
+    """Supervisor restart schedule: exponential backoff between restarts of
+    a crashing worker, capped at ``max_s``. ``max_restarts=None`` restarts
+    forever (a serving tier should keep trying); a bound turns a flapping
+    worker into a permanently-removed one."""
+
+    base_s: float = 0.05
+    mult: float = 2.0
+    max_s: float = 5.0
+    max_restarts: Optional[int] = None
+
+    def delay(self, restarts: int) -> float:
+        """Backoff before restart number ``restarts`` (1-based)."""
+        return min(self.max_s, self.base_s * (self.mult ** max(restarts - 1, 0)))
 
 
 # ---------------------------------------------------------------------------
@@ -337,22 +380,56 @@ class CircuitBreaker:
 class RepairLog:
     """Thread-safe record of degradation/repair events; optionally journaled
     to a ``repairs.jsonl`` next to the store so operators (and tools/scrub.py)
-    can see what the ladder did."""
+    can see what the ladder did.
 
-    def __init__(self, path: Optional[Path] = None):
+    The on-disk journal is size-capped: once it grows past ``max_bytes`` it
+    rotates to ``repairs.jsonl.1`` (shifting older generations up to
+    ``retention``, the oldest dropped) so a long-running server's advisory
+    log can never leak disk. The in-memory event list is capped alongside it
+    (``max_events``, oldest evicted) for the same reason."""
+
+    def __init__(self, path: Optional[Path] = None, *,
+                 max_bytes: int = 4 * 1024 * 1024, retention: int = 3,
+                 max_events: int = 10_000):
         self.path = Path(path) if path is not None else None
+        self.max_bytes = int(max_bytes)
+        self.retention = max(int(retention), 1)
+        self.max_events = max(int(max_events), 1)
         self._lock = threading.Lock()
         self.events: List[dict] = []
+        self.rotations = 0
+
+    def _rotate_locked(self) -> None:
+        """Shift repairs.jsonl -> .1 -> .2 ... dropping past ``retention``."""
+        try:
+            for i in range(self.retention - 1, 0, -1):
+                src = self.path.with_name(self.path.name + f".{i}")
+                if src.exists():
+                    os.replace(src, self.path.with_name(
+                        self.path.name + f".{i + 1}"))
+            stale = self.path.with_name(
+                self.path.name + f".{self.retention + 1}")
+            if stale.exists():
+                stale.unlink()
+            os.replace(self.path, self.path.with_name(self.path.name + ".1"))
+            self.rotations += 1
+        except OSError:
+            pass  # advisory; a failed rotation must never fail a request
 
     def record(self, kind: str, **ctx) -> dict:
         ev = {"kind": kind, "ts": time.time()}
         ev.update({k: v for k, v in ctx.items() if v is not None})
         with self._lock:
             self.events.append(ev)
+            if len(self.events) > self.max_events:
+                del self.events[:len(self.events) - self.max_events]
             if self.path is not None:
                 try:
                     with open(self.path, "a") as f:
                         f.write(json.dumps(ev, default=str) + "\n")
+                        size = f.tell()
+                    if size > self.max_bytes:
+                        self._rotate_locked()
                 except OSError:
                     pass  # the log is advisory; never fail a request over it
         return ev

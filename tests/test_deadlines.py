@@ -1,0 +1,120 @@
+"""Deadline plumbing end to end: pre-admission shedding, admission-wait
+budget decay, the pool watchdog's end-to-end job deadline, caller-side
+wait timeouts (``JobTimeout``) — and that none of these paths leak an
+admission slot, a pool job, or an in-flight read."""
+import numpy as np
+import pytest
+
+from repro.executor.graph import TaskGraph
+from repro.executor.pool import CorePool
+from repro.executor.server import ColdServer
+from repro.faults import DeadlineExceeded, JobTimeout, ModelQuarantined
+from repro.models.cnn import build_cnn
+
+
+@pytest.fixture
+def server(tmp_path):
+    pool = CorePool(n_little=2, n_big=1, name="deadline-test")
+    srv = ColdServer(tmp_path / "srv", pool=pool, n_little=2)
+    layers, x = build_cnn("mobilenet", image=16, width=0.25)
+    srv.add_model("mnet", layers)
+    srv.decide("mnet", x, n_little=2)
+    yield srv, x
+    # the leak gate: every test path must leave the pool joinable —
+    # a stuck worker thread here fails the test as a typed WorkerLost
+    pool.shutdown(timeout=10.0, raise_on_leak=True)
+    assert srv.stats["active_preps"] == 0
+
+
+def test_zero_budget_shed_before_admission(server):
+    srv, x = server
+    before = dict(srv.stats)
+    with pytest.raises(DeadlineExceeded):
+        srv.cold_start("mnet", x, deadline_s=0.0)
+    with pytest.raises(DeadlineExceeded):
+        srv.cold_start("mnet", x, deadline_s=-1.0)
+    # shed BEFORE the semaphore: nothing admitted, nothing outstanding
+    assert srv.stats["admitted"] == before["admitted"]
+    assert srv._outstanding == 0
+    # and the server still serves normally afterwards
+    res = srv.cold_start("mnet", x).result()
+    assert res.output is not None
+
+
+def test_wait_timeout_is_typed_and_releases_nothing_held(server):
+    srv, x = server
+    h = srv.cold_start("mnet", x)
+    with pytest.raises(JobTimeout):
+        h.result(timeout=1e-6)
+    # JobTimeout is a TimeoutError for pre-taxonomy callers
+    assert issubclass(JobTimeout, TimeoutError)
+    # the caller's wait gave up but the job is unharmed: a second wait
+    # completes, the admission slot frees on its own, no quarantine
+    res = h.result()
+    assert res.output is not None
+    assert srv._model_quarantine == {}
+    assert srv.stats["active_preps"] == 0
+    if srv.io_engine is not None:
+        assert srv.io_engine.reads_in_flight() == 0
+
+
+def test_job_deadline_expiry_typed_slot_released_no_quarantine(server):
+    srv, x = server
+    with pytest.raises(DeadlineExceeded):
+        srv.cold_start("mnet", x, deadline_s=1e-4).result()
+    # watchdog accounting is visible pool-wide
+    assert srv.pool.health["job_deadline_expired"] >= 1
+    # deadline pressure must NOT quarantine a healthy model ...
+    assert srv._model_quarantine == {}
+    # ... and the admission slot came back: an unbudgeted request runs
+    res = srv.cold_start("mnet", x).result()
+    assert res.output is not None
+    assert srv.stats["active_preps"] == 0
+    assert srv._outstanding == 0
+
+
+def test_admission_wait_decays_budget(tmp_path):
+    pool = CorePool(n_little=2, n_big=1, name="decay-test")
+    srv = ColdServer(tmp_path / "srv", pool=pool, n_little=2,
+                     max_concurrent_preps=1)
+    layers, x = build_cnn("mobilenet", image=16, width=0.25)
+    srv.add_model("mnet", layers)
+    srv.decide("mnet", x, n_little=2)
+    try:
+        first = srv.cold_start("mnet", x)   # holds the single prep slot
+        # a tiny budget cannot survive queueing behind `first`: by the
+        # time the slot frees, the budget is gone -> typed shed, slot
+        # RELEASED (the follow-up request proves it)
+        with pytest.raises(DeadlineExceeded):
+            h = srv.cold_start("mnet", x, deadline_s=2e-3)
+            h.result()
+        first.result()
+        res = srv.cold_start("mnet", x, deadline_s=60.0).result()
+        assert res.output is not None
+        assert srv.stats["active_preps"] == 0
+    finally:
+        pool.shutdown(timeout=10.0, raise_on_leak=True)
+
+
+def test_drain_refuses_then_resume_reopens(server):
+    srv, x = server
+    srv.cold_start("mnet", x).result()
+    assert srv.drain(timeout=10.0) is True
+    with pytest.raises(RuntimeError):
+        srv.cold_start("mnet", x)
+    assert srv.health()["draining"] is True
+    srv.resume()
+    res = srv.cold_start("mnet", x).result()
+    assert res.output is not None
+
+
+def test_pool_drain_and_resume():
+    pool = CorePool(n_little=1, n_big=1, name="drain-test")
+    try:
+        assert pool.drain(timeout=1.0) is True   # nothing in flight
+        with pytest.raises(RuntimeError, match="draining"):
+            pool.submit(TaskGraph(), name="refused")
+        pool.resume()
+        pool.submit(TaskGraph(), name="ok").wait(5.0)
+    finally:
+        pool.shutdown(timeout=5.0, raise_on_leak=True)

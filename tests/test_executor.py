@@ -277,3 +277,73 @@ def test_graph_hook_extends_job(tiny_engine):
     ex_end = {t.layer: t.end for t in res.traces if t.kind == "execute"}
     for t in packs:
         assert t.start >= ex_end[t.layer] - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# satellite: big/little core pinning (sched_setaffinity, clean no-op fallback)
+# ---------------------------------------------------------------------------
+def test_cpuset_split_big_top_little_bottom(monkeypatch):
+    import os
+
+    from repro.executor import pool as pool_mod
+
+    monkeypatch.setattr(pool_mod, "_HAS_AFFINITY", True)
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0, 1, 2, 3},
+                        raising=False)
+    p = CorePool(n_big=2, n_little=3, name="cpuset", pin_cores=True)
+    try:
+        # top half of the allowed cores -> big lanes, bottom half -> little;
+        # worker indices wrap within their half
+        assert p._cpuset_for("big", 0) == {2}
+        assert p._cpuset_for("big", 1) == {3}
+        assert p._cpuset_for("big", 2) == {2}
+        assert p._cpuset_for("little", 0) == {0}
+        assert p._cpuset_for("little", 1) == {1}
+        assert p._cpuset_for("little", 2) == {0}
+        # big and little cpu sets never overlap
+        bigs = p._cpuset_for("big", 0) | p._cpuset_for("big", 1)
+        littles = p._cpuset_for("little", 0) | p._cpuset_for("little", 1)
+        assert not (bigs & littles)
+    finally:
+        p.shutdown()
+
+
+def test_workers_pin_on_entry_and_record(monkeypatch):
+    import os
+    import threading
+
+    from repro.executor import pool as pool_mod
+
+    pins = {}
+
+    def fake_set(pid, cpus):
+        pins[threading.current_thread().name] = set(cpus)
+
+    monkeypatch.setattr(pool_mod, "_HAS_AFFINITY", True)
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0, 1, 2, 3},
+                        raising=False)
+    monkeypatch.setattr(os, "sched_setaffinity", fake_set, raising=False)
+    p = CorePool(n_big=1, n_little=2, name="pin", pin_cores=True)
+    try:
+        p.submit(_prep_graph([["a"], ["b"]]), name="warm").wait(10)
+        # every spawned worker pinned itself and recorded the outcome
+        assert p.pinned and all(v is not None for v in p.pinned.values())
+        for tname, cpus in pins.items():
+            assert p.pinned[tname] == sorted(cpus)
+    finally:
+        p.shutdown()
+
+
+def test_pinning_is_clean_noop_without_affinity_api(monkeypatch):
+    from repro.executor import pool as pool_mod
+
+    monkeypatch.setattr(pool_mod, "_HAS_AFFINITY", False)
+    p = CorePool(n_big=1, n_little=2, name="nopin", pin_cores=True)
+    try:
+        job = p.submit(_prep_graph([["a"], ["b"]]), name="run")
+        job.wait(10)
+        assert job.error is None
+        # outcome recorded as "not pinned", nothing raised anywhere
+        assert p.pinned and all(v is None for v in p.pinned.values())
+    finally:
+        p.shutdown()

@@ -297,3 +297,32 @@ def test_repair_log_records_and_journals(tmp_path):
     assert json.loads(lines[0])["kind"] == "cache_recompute"
     # advisory: an unwritable path must never fail the caller
     RepairLog(tmp_path / "no" / "such" / "dir" / "r.jsonl").record("x")
+
+
+def test_repair_log_rotates_at_size_cap(tmp_path):
+    p = tmp_path / "repairs.jsonl"
+    log = RepairLog(p, max_bytes=400, retention=2)
+    for i in range(60):
+        log.record("evt", idx=i, pad="x" * 40)
+    assert log.rotations >= 2
+    log.record("evt", idx=60)   # reopen the current generation
+    # current file restarted small; exactly `retention` old generations
+    assert p.stat().st_size <= 400 + 100
+    assert p.with_name("repairs.jsonl.1").exists()
+    assert p.with_name("repairs.jsonl.2").exists()
+    assert not p.with_name("repairs.jsonl.3").exists()
+    # every rotated line is still valid jsonl
+    for gen in ("", ".1", ".2"):
+        for line in p.with_name("repairs.jsonl" + gen).read_text() \
+                .splitlines():
+            assert json.loads(line)["kind"] == "evt"
+
+
+def test_repair_log_caps_in_memory_events(tmp_path):
+    log = RepairLog(tmp_path / "r.jsonl", max_events=5)
+    for i in range(12):
+        log.record("evt", idx=i)
+    assert len(log.events) == 5
+    # oldest evicted, newest kept
+    assert [e["idx"] for e in log.events] == list(range(7, 12))
+    assert log.counts() == {"evt": 5}

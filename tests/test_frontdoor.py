@@ -1,0 +1,221 @@
+"""FrontDoor: supervised multi-worker tier — wire framing, typed-fault
+transport, lane/shed admission logic, cache-aware routing, and one
+end-to-end chaos integration (spawn, SIGKILL, failover, restart)."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.executor.frontdoor import (
+    BATCH, INTERACTIVE, FrontDoor, FrontDoorRequest, _Worker, rebuild_fault,
+    recv_msg, send_msg,
+)
+from repro.faults import (
+    DeadlineExceeded, ModelQuarantined, ReadFault, WorkerLost,
+)
+
+
+# -- wire format -------------------------------------------------------------
+
+def test_framing_roundtrip_with_numpy():
+    a, b = socket.socketpair()
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    msg = {"type": "result", "rid": 7, "output": x, "total_s": 0.5}
+    send_msg(a, msg, threading.Lock())
+    got = recv_msg(b)
+    assert got["type"] == "result" and got["rid"] == 7
+    np.testing.assert_array_equal(got["output"], x)
+    # several messages back to back stay framed
+    for i in range(3):
+        send_msg(a, {"i": i})
+    assert [recv_msg(b)["i"] for _ in range(3)] == [0, 1, 2]
+    a.close()
+    assert recv_msg(b) is None  # clean EOF -> None, not an exception
+    b.close()
+
+
+def test_rebuild_fault_preserves_taxonomy():
+    e = rebuild_fault({"type": "DeadlineExceeded", "msg": "late",
+                       "site": "watchdog"})
+    assert isinstance(e, DeadlineExceeded) and e.site == "watchdog"
+    e = rebuild_fault({"type": "ModelQuarantined", "msg": "sick",
+                       "retry_after": 1.5})
+    assert isinstance(e, ModelQuarantined) and e.retry_after == 1.5
+    e = rebuild_fault(ReadFault("torn", layer="conv1").describe())
+    assert isinstance(e, ReadFault) and e.layer == "conv1"
+    # unknown / non-fault types degrade to RuntimeError, never crash
+    assert isinstance(rebuild_fault({"type": "ValueError", "msg": "x"}),
+                      RuntimeError)
+    assert isinstance(rebuild_fault({}), RuntimeError)
+
+
+# -- admission: shed before queuing (no workers needed) ----------------------
+
+@pytest.fixture
+def door(tmp_path):
+    fd = FrontDoor(tmp_path / "fd", n_workers=2)
+    fd._models["m"] = {"name": "m", "builder": "x:y", "kwargs": {}}
+    return fd
+
+
+def test_shed_quarantined_model_typed(door):
+    door._quarantine["m"] = time.monotonic() + 10.0
+    with pytest.raises(ModelQuarantined) as ei:
+        door.request("m", None)
+    assert ei.value.retry_after is not None
+    assert door.stats["shed_quarantine"] == 1
+    assert not door._queues[INTERACTIVE]  # never reached a queue
+
+
+def test_shed_budget_below_rpc_floor_typed(door):
+    with pytest.raises(DeadlineExceeded):
+        door.request("m", None, deadline_s=door.rpc_overhead_s / 2)
+    assert door.stats["shed_deadline"] == 1
+    assert not door._queues[INTERACTIVE]
+
+
+def test_shed_on_estimated_queue_delay(door):
+    door._svc_ewma["m"] = 0.2
+    # 12 queued ahead, zero live slots -> est (12//1)*0.2 = 2.4s > 1s budget
+    for _ in range(12):
+        door._queues[BATCH].append(object())
+    with pytest.raises(DeadlineExceeded):
+        door.request("m", None, deadline_s=1.0, lane=BATCH)
+    # unknown service time: NEVER shed on zero knowledge
+    door._svc_ewma.clear()
+    req = door.request("m", None, deadline_s=1.0, lane=BATCH)
+    assert req in door._queues[BATCH]
+
+
+def test_unknown_model_and_lane_rejected(door):
+    with pytest.raises(KeyError):
+        door.request("nope", None)
+    with pytest.raises(ValueError):
+        door.request("m", None, lane="bulk")
+
+
+# -- routing + lane policy (fabricated workers) ------------------------------
+
+def _fake_worker(wid, *, alive=True, in_flight=0, resident=(), served=()):
+    w = _Worker(wid)
+    w.alive = alive
+    w.health = {"resident": list(resident),
+                "served": {m: 1 for m in served}}
+    for i in range(in_flight):
+        w.in_flight[-(i + 1)] = object()
+    return w
+
+
+def test_routing_prefers_resident_then_served_then_least_loaded(tmp_path):
+    fd = FrontDoor(tmp_path / "fd", n_workers=3, max_inflight_per_worker=4)
+    fd._workers["w0"] = _fake_worker("w0", in_flight=0)
+    fd._workers["w1"] = _fake_worker("w1", in_flight=3, served=("m",))
+    fd._workers["w2"] = _fake_worker("w2", in_flight=3, resident=("m",))
+    assert fd._route_locked("m").wid == "w2"      # device-resident wins
+    fd._workers["w2"].health["resident"] = []
+    assert fd._route_locked("m").wid == "w1"      # then page-cache warm
+    fd._workers["w1"].health["served"] = {}
+    assert fd._route_locked("m").wid == "w0"      # then least-loaded
+    for w in fd._workers.values():
+        w.alive = False
+    assert fd._route_locked("m") is None          # nobody alive
+
+
+def test_batch_lane_leaves_interactive_reserve(tmp_path):
+    fd = FrontDoor(tmp_path / "fd", n_workers=2, max_inflight_per_worker=1,
+                   interactive_reserve=1)
+    fd._workers["w0"] = _fake_worker("w0")
+    fd._workers["w1"] = _fake_worker("w1", in_flight=1)
+    fd._models["m"] = {"name": "m"}
+    # one free slot total == the reserve: batch must NOT take it
+    fd._queues[BATCH].append(FrontDoorRequest(1, "m", None, BATCH, None))
+    assert fd._pick_locked() is None
+    assert len(fd._queues[BATCH]) == 1            # still queued, not lost
+    # an interactive request takes that same last slot immediately
+    fd._queues[INTERACTIVE].append(
+        FrontDoorRequest(2, "m", None, INTERACTIVE, None))
+    req, w = fd._pick_locked()
+    assert req.lane == INTERACTIVE and w.wid == "w0"
+
+
+def test_failover_requeues_at_lane_head_then_worker_lost(tmp_path):
+    fd = FrontDoor(tmp_path / "fd", n_workers=2, max_failovers=1)
+    w = _fake_worker("w0")
+    fd._workers["w0"] = w
+    young = FrontDoorRequest(1, "m", None, INTERACTIVE, None)
+    young.attempts = 1
+    spent = FrontDoorRequest(2, "m", None, INTERACTIVE, None)
+    spent.attempts = 2                            # max_failovers exhausted
+    w.in_flight = {1: young, 2: spent}
+    fd._queues[INTERACTIVE].append(
+        FrontDoorRequest(3, "m", None, INTERACTIVE, None))
+    fd._on_worker_lost(w)
+    assert not w.in_flight
+    assert fd._queues[INTERACTIVE][0] is young    # failover jumps the queue
+    assert spent.done()
+    with pytest.raises(WorkerLost):
+        spent.result(0)
+    assert fd.stats["failovers"] == 1 and fd.stats["failover_lost"] == 1
+
+
+# -- end-to-end: spawn real workers, kill one, fail over ---------------------
+
+def test_frontdoor_chaos_end_to_end(tmp_path):
+    from repro.executor.server import ColdServer
+    from repro.models.cnn import build_cnn
+
+    layers, x = build_cnn("mobilenet", image=16, width=0.25)
+    iso = ColdServer(tmp_path / "iso", n_little=2)
+    iso.add_model("mnet", layers)
+    iso.decide("mnet", x, n_little=2)
+    ref = np.asarray(iso.cold_start("mnet", x).result().output)
+
+    fd = FrontDoor(tmp_path / "fd", n_workers=2,
+                   worker_args={"n_little": 2, "n_big": 1})
+    fd.start()
+    try:
+        fd.add_model("mnet", "repro.models.cnn:build_cnn",
+                     name="mobilenet", image=16, width=0.25)
+        req = fd.request("mnet", x, deadline_s=120.0)
+        for _ in range(1000):
+            if req.worker is not None:
+                break
+            time.sleep(0.002)
+        victim = req.worker
+        fd.kill_worker(victim)                    # SIGKILL mid cold start
+        res = req.result(timeout=120)
+        assert res["worker"] != victim            # a sibling served it
+        # vs the in-process isolated server: numerical equivalence only —
+        # its decide() profiles/calibrates under whatever load the test
+        # suite is generating and may legitimately pick a different (but
+        # numerically equivalent) kernel plan. Bit-identity is asserted
+        # below across WORKERS, which share one plan.json + ProfileDB by
+        # construction (the benchmark gates bit-identity vs isolated in a
+        # quiet dedicated CI step).
+        np.testing.assert_allclose(np.asarray(res["output"]), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:        # restart under backoff
+            h = fd.health()
+            if h["workers"][victim]["alive"]:
+                break
+            time.sleep(0.05)
+        h = fd.health()
+        assert h["workers"][victim]["alive"]
+        assert h["stats"]["worker_restarts"] >= 1
+        assert h["stats"]["failovers"] >= 1
+        # nothing leaked: no stuck in-flight entries or queued requests
+        assert sum(w["in_flight"] for w in h["workers"].values()) == 0
+        assert sum(h["queues"].values()) == 0
+        # the restarted fleet still serves BIT-identically to the failover
+        # result: every worker (including the respawned victim) loads the
+        # same plan.json and shared profile DB, so outputs are idempotent
+        # across workers
+        res2 = fd.request("mnet", x, deadline_s=120.0).result(120)
+        np.testing.assert_array_equal(np.asarray(res2["output"]),
+                                      np.asarray(res["output"]))
+    finally:
+        fd.shutdown()

@@ -150,12 +150,21 @@ def test_profile_db_scoped_by_host(tmp_path):
     db.save()
     again = ProfileDB(tmp_path / "db.json")
     assert again.get("sc0", "k") is not None
-    # a different host fingerprint must miss everything
+    # a different host fingerprint never gets a FRESH hit: the donor host's
+    # entries are served as STALE drift fallbacks (flagged for background
+    # re-profiling) rather than adopted silently
     foreign = ProfileDB(tmp_path / "db.json")
     foreign.host = "elsewhere"
     foreign.entries = {}
     foreign._load()
-    assert foreign.get("sc0", "k") is None
+    assert foreign.drifted_from == db.host
+    assert foreign.get("sc0", "k") is not None
+    assert foreign.stats["hits"] == 0
+    assert foreign.stats["stale_hits"] == 1
+    assert foreign.stale_pending() == [("sc0", "k")]
+    # a fresh local measurement supersedes the drifted fallback
+    foreign.put("sc0", "k", p)
+    assert foreign.stale_pending() == []
 
 
 # ---------------------------------------------------------------------------
