@@ -469,6 +469,93 @@ def bench_async(name: str, weights: Dict[str, dict], repeats: int = 3,
     return res
 
 
+def bench_quantized(print_csv: bool = True, smoke: bool = False,
+                    num_layers: int = 8) -> Dict[str, float]:
+    """Quantized transform-cache arms (format v4): three ColdEngines over
+    the SAME LLM graph, differing only in eligible kernels —
+
+      bf16   bf16_cast cache entries (the lossless reference arm)
+      int8   per-channel int8 extents (+bf16_cast for the embed gather)
+      int4   nibble-packed int4 extents (+bf16_cast for the embed)
+
+    Each arm runs Algorithm-1 ``decide()`` under the deterministic
+    synthetic cost model (quantized entries = smaller read, nonzero
+    dequant surcharge), then a REAL ``run_cold`` whose cold cache bytes
+    are metered via the store's ``bytes_served()`` counter.
+
+    ``--smoke`` hard gates (the PR's acceptance criteria):
+      * decide() picks the quantized (kernel, cache) choice for a majority
+        of matmul-dominated layers (tblocks + lm_head);
+      * measured cold bytes served: int8 >= 1.8x and int4 >= 3x below the
+        bf16 cache arm;
+      * outputs stay within per-dtype tolerance of the bf16 arm
+        (correlation > 0.99 for int8, > 0.8 for int4)."""
+    from repro.core.engine import ColdEngine
+    from repro.core.llm_graph import tiny_llm_graph
+    from repro.core.profiler import SyntheticProfiler
+
+    graph, x = tiny_llm_graph(num_layers)
+    matmul_layers = [l.spec.name for l in graph
+                     if l.spec.op_type in ("tblock", "lmhead")]
+    arms = [("bf16", ["bf16_cast"]),
+            ("int8", ["int8", "bf16_cast"]),
+            ("int4", ["int4", "bf16_cast"])]
+    res: Dict[str, float] = {}
+    outputs: Dict[str, np.ndarray] = {}
+    with tempfile.TemporaryDirectory(prefix="iofmt_quant_") as td:
+        for arm, allow in arms:
+            eng = ColdEngine(graph, Path(td) / arm, store_fmt="super",
+                             allow_lossy=True, kernel_allowlist=allow)
+            eng.profiler_factory = SyntheticProfiler
+            # no wall-clock interference calibration: the pick gates must
+            # be a pure function of the synthetic cost model, not of how
+            # much I/O the preceding benchmark sections churned
+            stats = eng.decide(x, n_little=2, calibrate_interference=False)
+            picked = {l.spec.name: c for l, c in zip(eng.layers,
+                                                     eng.plan.choices)}
+            n_quant = sum(1 for n in matmul_layers
+                          if picked[n].kernel == arm and picked[n].use_cache)
+            served0 = eng.store.bytes_served()
+            t0 = time.perf_counter()
+            out = eng.run_cold(x, n_little=2)
+            t_cold = time.perf_counter() - t0
+            cold_bytes = eng.store.bytes_served() - served0
+            outputs[arm] = np.asarray(out.output, np.float32)
+            res[f"{arm}_cold_bytes"] = float(cold_bytes)
+            res[f"{arm}_cold_s"] = t_cold
+            res[f"{arm}_planned_cached_bytes"] = float(
+                stats["planned_cold_read_bytes"]["cached_bytes"])
+            res[f"{arm}_quant_picks"] = float(n_quant)
+            if print_csv:
+                print(csv_line(
+                    f"io_quant/{arm}/cold", t_cold,
+                    f"bytes={cold_bytes};quant_picks={n_quant}"
+                    f"/{len(matmul_layers)}"))
+            if smoke and arm in ("int8", "int4"):
+                assert n_quant > len(matmul_layers) // 2, (
+                    f"{arm}: decide() picked quantized cache for only "
+                    f"{n_quant}/{len(matmul_layers)} matmul layers")
+        for arm, floor in (("int8", 1.8), ("int4", 3.0)):
+            ratio = res["bf16_cold_bytes"] / max(res[f"{arm}_cold_bytes"], 1)
+            res[f"{arm}_bytes_ratio"] = ratio
+            a = outputs[arm].ravel()
+            b = outputs["bf16"].ravel()
+            corr = float(np.corrcoef(a, b)[0, 1])
+            res[f"{arm}_corr"] = corr
+            if print_csv:
+                print(f"# quantized/{arm}: cold-bytes {ratio:.2f}x below "
+                      f"bf16 (floor {floor}x), output corr {corr:.4f}")
+            if smoke:
+                assert ratio >= floor, (
+                    f"{arm} arm read {res[f'{arm}_cold_bytes']:.0f}B cold vs "
+                    f"bf16 {res['bf16_cold_bytes']:.0f}B — "
+                    f"{ratio:.2f}x < required {floor}x")
+                tol = 0.99 if arm == "int8" else 0.8
+                assert corr > tol, (
+                    f"{arm} output corr {corr:.4f} <= {tol} vs bf16 arm")
+    return res
+
+
 def run(print_csv: bool = True, smoke: bool = False) -> Dict[str, Dict[str, float]]:
     if smoke:
         cases: List[Tuple[str, Dict[str, dict]]] = [
@@ -494,6 +581,7 @@ def run(print_csv: bool = True, smoke: bool = False) -> Dict[str, Dict[str, floa
         cases[-1][0], cases[-1][1], repeats=repeats, print_csv=print_csv,
         smoke=smoke)
     out["durability"] = bench_durability(print_csv=print_csv, smoke=smoke)
+    out["quantized"] = bench_quantized(print_csv=print_csv, smoke=smoke)
     if print_csv and not CAN_DROP:
         print("# warning: cannot drop page cache — warm-cache numbers",
               file=sys.stderr)

@@ -55,6 +55,7 @@ from repro.checkpoint.superbundle import (
     write_superbundle,
 )
 from repro.faults import classify
+from repro import quant
 
 
 def _safe(name: str) -> str:
@@ -218,6 +219,9 @@ class LayerStore:
             self._order: List[str] = []  # write order == graph order
             self._reader: Optional[SuperBundle] = None
             self._reader_seen = 0  # reader.dropped entries already harvested
+            # container bytes served by readers already closed; live reader
+            # bytes are added on top by bytes_served()
+            self._bytes_served_base = 0
             self._maintain_thread = None
             self._maintain_result = None
 
@@ -232,8 +236,19 @@ class LayerStore:
             # audits on materializing reads) so dropped_entries stays the
             # complete report
             self.dropped_entries += self._reader.dropped[self._reader_seen:]
+            self._bytes_served_base += self._reader.bytes_served
             self._reader.close()
             self._reader = None
+
+    def bytes_served(self) -> int:
+        """Container extent bytes served through reads (mmap views + async
+        waits) across all reader generations — the measured cold-bytes
+        counter the quantized-cache benchmarks snapshot around a run.
+        0 for non-super formats (no shared counter to aggregate)."""
+        if self.fmt != "super":
+            return 0
+        live = self._reader.bytes_served if self._reader is not None else 0
+        return self._bytes_served_base + live
 
     def close(self):
         """Release the shared super-bundle mmap (the next read reopens it) —
@@ -490,6 +505,28 @@ class LayerStore:
             sb = self._super()
             return sb.raw_nbytes(layer) if sb is not None else 0
         p = self._raw_path(layer)
+        if self.fmt == "bundle":
+            return p.stat().st_size if p.exists() else 0
+        return sum(q.stat().st_size for q in p.glob("*.npy"))
+
+    def cached_bytes(self, layer: str, kernel: str) -> int:
+        """Extent bytes a cold read of one cache entry costs. For
+        ``fmt="super"`` this is the FOLDED payload size — a quantized
+        entry's int8/int4 bytes, not its dequantized footprint — i.e. the
+        read-cost side of the scheduler's smaller-read/dequant trade."""
+        if self.fmt == "super":
+            pend = self._pending_cache.get((layer, kernel))
+            if pend is not None:
+                groups, rest = quant.split_groups(pend)
+                return (sum(int(np.asarray(v).nbytes) for v in rest.values())
+                        + sum(int(np.asarray(g["data"]).nbytes)
+                              for g in groups.values()))
+            sb = self._super()
+            if sb is None or not sb.has_cached(layer, kernel):
+                return 0
+            return sum(e["nbytes"]
+                       for e in sb._layers[layer]["cache"][kernel])
+        p = self._cache_path(layer, kernel)
         if self.fmt == "bundle":
             return p.stat().st_size if p.exists() else 0
         return sum(q.stat().st_size for q in p.glob("*.npy"))

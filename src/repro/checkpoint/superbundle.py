@@ -1,4 +1,4 @@
-"""Model-level super-bundles — the cold path's on-disk container (format v3).
+"""Model-level super-bundles — the cold path's on-disk container (format v4).
 
 PR 1's per-layer bundles turned N-tensor layer loads into one open *per
 layer*; the super-bundle turns a whole model into ONE open + ONE shared
@@ -6,19 +6,19 @@ mmap: every layer's tensors — raw weights AND the §3.1.2 post-transformed
 per-kernel cache — live in a single file, laid out in plan/graph order so
 the exec chain's cold sweep reads the file front to back.
 
-Layout (format version 3; the full byte-level specification of v1/v2/v3
+Layout (format version 4; the full byte-level specification of v1–v4
 lives in ``docs/formats.md``)::
 
     [0:4)     magic  b"NNVS"
-    [4:8)     format version (uint32 LE, = 3)
+    [4:8)     format version (uint32 LE, = 4)
     [8:16)    header length in bytes (uint64 LE)
-    [16:20)   CRC-32C of the header JSON (uint32 LE)   [v3 only]
+    [16:20)   CRC-32C of the header JSON (uint32 LE)   [v3+]
     [20:20+H) header — UTF-8 JSON:
               {"generation": n,                 # bumped by every rewrite
                "order":  [layer, ...],          # plan/graph order
                "layers": {layer: {
                    "raw":   [{"name","dtype","shape","offset","nbytes",
-                              "crc32c"}],
+                              "crc32c", "quant"?}],
                    "cache": {kernel: [{same-entry-shape}, ...]}}}}
     ...       zero padding to the first 64-byte boundary; the header
               region carries HEADER_SLACK spare bytes so metadata
@@ -30,7 +30,23 @@ lives in ``docs/formats.md``)::
 Offsets are absolute from the start of the file. Dtypes are tagged by
 name; bfloat16 is stored natively and resolved through ``ml_dtypes`` on
 read. Version-2 files (no checksums, no generation, header JSON at byte
-16) still open read-only; any rewrite upgrades them to v3.
+16) and v3 files (no quantized extents) still open read-only; any rewrite
+or in-place commit upgrades them to v4.
+
+Quantized cache extents (format v4): a weight dict written under the
+``repro.quant`` companion-key convention (``w:q8``/``w:q4`` +
+``w:qscale`` [+ ``w:qzero``]) FOLDS into ONE extent per tensor — entry
+``name`` is the base tensor name, ``dtype`` is the scheme tag (``int8``
+or ``int4``), the payload is exactly the quantized bytes (CRC-32C over
+them), and the entry's ``"quant"`` metadata carries the per-channel
+scales/zero-points inline in the header. Reads EXPAND the extent back to
+the identical companion dict, so fold → write → read → refold is
+bit-exact through rewrites and journal replay, and every durability path
+(intent journal, torn-slot resolution, lazy/eager verification, async
+``submit_read`` audits) treats quantized extents as ordinary
+checksum-protected slots. ``int4`` payloads are nibble-packed uint8 of
+shape ``((K+1)//2, N)``; consumers recover the logical K from the layer
+spec.
 
 Reading: ``SuperBundle`` holds the single read-only mmap; ``read_raw`` /
 ``read_cached`` return zero-copy views into it (``materialize=True``
@@ -88,10 +104,14 @@ from repro.checkpoint.bundle import (
 )
 from repro.checkpoint.integrity import crc32c, fsync_file
 from repro.faults import IntegrityFault
+from repro import quant
 
 MAGIC = b"NNVS"
-VERSION = 3
-# v3 fixed prefix: magic, version, header length, header CRC-32C
+# v4 adds quantized cache extents (folded int8/int4 payloads + header
+# "quant" metadata); the fixed prefix is identical to v3, so v3 readers of
+# this module's lineage reject v4 by version, not by parse failure
+VERSION = 4
+# v3+ fixed prefix: magic, version, header length, header CRC-32C
 _V3_FIXED_FMT = "<4sIQI"
 _V3_FIXED = struct.calcsize(_V3_FIXED_FMT)
 # spare header bytes so in-place cache replacement survives small metadata
@@ -130,14 +150,30 @@ def _hook(phase: str, **ctx):
 
 
 def _payload(weights: LayerWeights) -> Tuple[List[dict], List[np.ndarray]]:
-    """Name-sorted (header entries, contiguous arrays) for one section."""
+    """Name-sorted (header entries, contiguous arrays) for one section.
+
+    Format v4 fold point: a quantized companion group (``w:q8``/``w:q4`` +
+    ``w:qscale`` [+ ``w:qzero``]) becomes ONE extent named after the base
+    tensor — the payload is exactly the quantized bytes (CRC over them),
+    the dtype tag is the scheme (``int8``/``int4``), ``shape`` is the
+    STORED payload shape (packed, for int4), and the scales/zero-points
+    ride in the entry's ``"quant"`` metadata."""
+    groups, rest = quant.split_groups(weights)
     entries: List[dict] = []
     arrs: List[np.ndarray] = []
-    for name in sorted(weights):
-        a = np.ascontiguousarray(np.asarray(weights[name]))
-        entries.append({"name": name, "dtype": _dtype_tag(a.dtype),
-                        "shape": list(a.shape), "nbytes": int(a.nbytes),
-                        "crc32c": crc32c(a)})
+    for name in sorted(set(rest) | set(groups)):
+        if name in groups:
+            g = groups[name]
+            a = np.ascontiguousarray(np.asarray(g["data"]))
+            entries.append({"name": name, "dtype": g["scheme"],
+                            "shape": list(a.shape), "nbytes": int(a.nbytes),
+                            "crc32c": crc32c(a),
+                            "quant": quant.quant_meta(g)})
+        else:
+            a = np.ascontiguousarray(np.asarray(rest[name]))
+            entries.append({"name": name, "dtype": _dtype_tag(a.dtype),
+                            "shape": list(a.shape), "nbytes": int(a.nbytes),
+                            "crc32c": crc32c(a)})
         arrs.append(a)
     return entries, arrs
 
@@ -474,6 +510,9 @@ class SuperBundle:
         self.path = Path(path)
         self.verify = verify
         self.dropped: List[dict] = []
+        # extent bytes served through _views / async waits since open — the
+        # measured-cold-bytes counter the benchmarks snapshot around a run
+        self.bytes_served = 0
         if recover:
             self.dropped += recover_journal(self.path)
         with open(self.path, "rb") as f:
@@ -590,6 +629,15 @@ class SuperBundle:
         out: LayerWeights = {}
         for e in entries:
             seg = self._buf[e["offset"]: e["offset"] + e["nbytes"]]
+            self.bytes_served += e["nbytes"]
+            if "quant" in e:
+                # v4 expand point: the payload view under the scheme dtype,
+                # scales/zero-points decoded from the header metadata
+                pv = seg.view(quant.payload_dtype(e["dtype"])).reshape(
+                    e["shape"])
+                out.update(quant.expand_entry(e["name"], e["quant"], pv,
+                                              materialize=materialize))
+                continue
             v = seg.view(_dtype_from_tag(e["dtype"])).reshape(e["shape"])
             out[e["name"]] = np.array(v) if materialize else v
         return out
@@ -796,8 +844,14 @@ class PendingLayerRead:
                         self.on_drop()
                     return self._result
                 self.sb._verified.add(id(e))
-                out[e["name"]] = view.view(
-                    _dtype_from_tag(e["dtype"])).reshape(e["shape"])
+                self.sb.bytes_served += e["nbytes"]
+                if "quant" in e:
+                    pv = view.view(quant.payload_dtype(
+                        e["dtype"])).reshape(e["shape"])
+                    out.update(quant.expand_entry(e["name"], e["quant"], pv))
+                else:
+                    out[e["name"]] = view.view(
+                        _dtype_from_tag(e["dtype"])).reshape(e["shape"])
         except IntegrityError:
             self._reset()
             raise
@@ -923,6 +977,11 @@ def _try_inplace_many(
         for eo, en in zip(hdr["layers"][layer]["cache"][kernel], entries_new):
             eo.update(dtype=en["dtype"], shape=en["shape"],
                       nbytes=en["nbytes"], crc32c=en["crc32c"])
+            # carry (or clear) the v4 quantization metadata with the entry
+            if "quant" in en:
+                eo["quant"] = en["quant"]
+            else:
+                eo.pop("quant", None)
         metas = []
         for eo, a in zip(old, arrs):
             b = a.tobytes()
@@ -959,12 +1018,14 @@ def set_cache_entries(
         raw, cache = _load_all(sb)
         dropped = list(sb.dropped)  # _load_all may audit-drop more
         order = list(sb.order)
-        for (layer, kernel), (entries_new, arrs) in payloads.items():
+        for (layer, kernel), weights in updates.items():
             if layer not in order:
                 order.append(layer)
                 raw.setdefault(layer, {})
-            cache.setdefault(layer, {})[kernel] = dict(
-                zip([e["name"] for e in entries_new], arrs))
+            # keep the ORIGINAL weight dict (companion keys included) so the
+            # rewrite's _payload refolds quantized groups instead of writing
+            # a folded payload as a plain tensor with its metadata lost
+            cache.setdefault(layer, {})[kernel] = dict(weights)
         write_superbundle(path, raw, cache, order=order,
                           generation=sb.generation + 1)
     return {"mode": "rewrite", "dropped": dropped}

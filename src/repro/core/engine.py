@@ -27,7 +27,7 @@ import json
 import time
 from dataclasses import dataclass, field, replace
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,7 @@ class ColdEngine:
         *,
         core_model: CoreModel = CoreModel(),
         allow_lossy: bool = False,
+        kernel_allowlist: Optional[Sequence[str]] = None,
         shader_cache: bool = True,
         store_fmt: str = "bundle",
         store_verify: str = "lazy",
@@ -83,6 +84,12 @@ class ColdEngine:
                                 verify=store_verify)
         self.core_model = core_model
         self.allow_lossy = allow_lossy
+        # restrict Algorithm-1's kernel candidates by name (benchmark arms:
+        # a bf16-only vs int8-only engine differ ONLY in eligible kernels).
+        # The first supported registry kernel always stays eligible — it is
+        # the raw-weights default used by shape tracing and fault fallback.
+        self.kernel_allowlist = (set(kernel_allowlist)
+                                 if kernel_allowlist is not None else None)
         self.compile_cache = CompileCache(
             Path(store_dir) / "xla_cache" if shader_cache else None)
         # shape-class sharing: profile/compile one representative per class
@@ -140,6 +147,9 @@ class ColdEngine:
               if k.supports(spec)]
         if not ks:
             raise ValueError(f"no kernel for {spec}")
+        if self.kernel_allowlist is not None:
+            ks = [k for i, k in enumerate(ks)
+                  if i == 0 or k.name in self.kernel_allowlist]
         return ks
 
     def _trace_shapes(self, x: np.ndarray) -> List[np.ndarray]:
@@ -465,9 +475,26 @@ class ColdEngine:
                 split["read_s"] += p.read_raw_s
                 split["transform_s"] += p.transform_s
             split["stage_s"] += p.stage_s
+        # planned cold-read bytes of the chosen plan: the FOLDED extent
+        # bytes each choice will pull off disk (quantized entries count
+        # their int8/int4 payload, not the dequantized footprint)
+        cold = {"raw_bytes": 0, "cached_bytes": 0,
+                "by_kernel": {}}  # type: Dict[str, Any]
+        for l, c in zip(self.layers, self.plan.choices):
+            if not l.spec.weight_shapes:
+                continue
+            if c.use_cache:
+                nb = self.store.cached_bytes(l.spec.name, c.kernel)
+                cold["cached_bytes"] += nb
+            else:
+                nb = self.store.raw_bytes(l.spec.name)
+                cold["raw_bytes"] += nb
+            cold["by_kernel"][c.kernel] = cold["by_kernel"].get(c.kernel,
+                                                                0) + nb
         stats = {
             "plan_generation_s": gen_s,
             "est_makespan_s": self.plan.est_makespan,
+            "planned_cold_read_bytes": cold,
             "io_interference": self.io_interference,
             "read_depth": self.plan.read_depth,
             "cache_bytes": self.store.cache_bytes(),

@@ -24,7 +24,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import LayerDef
-from repro.core.registry import Kernel, KERNEL_REGISTRY, LayerSpec
+from repro.core.registry import (
+    Kernel, KERNEL_REGISTRY, LOSSY_KERNELS, LayerSpec,
+)
 from repro.models import layers as L
 
 
@@ -113,9 +115,100 @@ class HeadBf16(Kernel):
         return (h @ w["w"]).astype(jnp.float32)
 
 
+def _dequant(w: Dict[str, jnp.ndarray], spec: LayerSpec
+             ) -> Dict[str, jnp.ndarray]:
+    """Expand a companion-key weight dict (``repro.quant`` convention) to a
+    plain dict: int8/int4 tensors dequantized to f32 in-graph, everything
+    else passed through. Logical K of a packed int4 tensor comes from the
+    layer spec (static under jit)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for k, v in w.items():
+        if k.endswith(":qscale") or k.endswith(":qzero"):
+            continue
+        if k.endswith(":q8"):
+            base = k[: -len(":q8")]
+            out[base] = v.astype(jnp.float32) * w[base + ":qscale"]
+        elif k.endswith(":q4"):
+            base = k[: -len(":q4")]
+            K = spec.weight_shapes[base][0]
+            p = v.astype(jnp.int32)
+            lo = p & 0x0F
+            hi = (p >> 4) & 0x0F
+            lo = jnp.where(lo >= 8, lo - 16, lo)
+            hi = jnp.where(hi >= 8, hi - 16, hi)
+            q = jnp.stack([lo, hi], axis=1).reshape(
+                2 * p.shape[0], p.shape[1])[:K]
+            out[base] = q.astype(jnp.float32) * w[base + ":qscale"]
+        else:
+            out[k] = v
+    return out
+
+
+class TBlockInt8(Kernel):
+    """Quantized transform cache for a decoder block: every 2-D matmul
+    operand stored as per-channel int8 (+f32 scales in the extent header),
+    1-D norm gains as bf16 — ~4x fewer cold cache bytes than f32, ~2x
+    fewer than bf16_cast. Execution dequantizes in-graph and runs the same
+    bf16 block forward. Lossy (bounded per-weight error), so gated behind
+    the engine's ``allow_lossy``."""
+    name = "int8"
+    op_type = "tblock"
+    bits = 8
+
+    def transform(self, raw, spec):
+        from repro import quant
+
+        out = quant.quantize_weights(raw, bits=self.bits)
+        return {k: (np.asarray(jnp.asarray(v, jnp.bfloat16))
+                    if getattr(v, "ndim", 0) == 1 else v)
+                for k, v in out.items()}
+
+    def execute(self, w, x, spec):
+        return _block_forward(_dequant(w, spec), x, spec.config["cfg"],
+                              jnp.bfloat16)
+
+
+class TBlockInt4(TBlockInt8):
+    """Nibble-packed int4 block cache: ~8x fewer cold cache bytes than f32
+    — the last rung of the read-bytes ladder; coarser than int8."""
+    name = "int4"
+    bits = 4
+
+
+class HeadInt8(Kernel):
+    """lm_head with the vocab-projection matrix as per-channel int8."""
+    name = "int8"
+    op_type = "lmhead"
+    bits = 8
+
+    def transform(self, raw, spec):
+        from repro import quant
+
+        out = quant.quantize_weights(raw, bits=self.bits)
+        return {k: (np.asarray(jnp.asarray(v, jnp.bfloat16))
+                    if getattr(v, "ndim", 0) == 1 else v)
+                for k, v in out.items()}
+
+    def execute(self, w, x, spec):
+        cfg = spec.config["cfg"]
+        wd = _dequant(w, spec)
+        h = L.rms_norm(x, wd["final_norm"].astype(jnp.bfloat16), cfg.norm_eps)
+        return (h @ wd["w"].astype(jnp.bfloat16)).astype(jnp.float32)
+
+
+class HeadInt4(HeadInt8):
+    name = "int4"
+    bits = 4
+
+
 KERNEL_REGISTRY.setdefault("tblock", [TBlockF32Direct(), TBlockBf16()])
 KERNEL_REGISTRY.setdefault("embed", [EmbedDirect(), EmbedBf16()])
 KERNEL_REGISTRY.setdefault("lmhead", [HeadDirect(), HeadBf16()])
+# quantized variants are lossy: eligible only under the engine's allow_lossy
+# (embed stays unquantized — it's a gather, not a matmul, and its rows feed
+# the residual stream directly)
+LOSSY_KERNELS.setdefault("tblock", [TBlockInt8(), TBlockInt4()])
+LOSSY_KERNELS.setdefault("lmhead", [HeadInt8(), HeadInt4()])
 
 
 def build_llm_graph(cfg: ArchConfig, params) -> Tuple[List[LayerDef], np.ndarray]:

@@ -241,6 +241,58 @@ class LinearLowPrecision(Kernel):
         return y
 
 
+class LinearInt8(Kernel):
+    """Per-channel symmetric int8 cache entry (``repro.quant`` companion
+    keys): ~4x fewer cold cache bytes than f32, ~2x fewer than bf16. The
+    matmul consumes the int8 tensor directly and the per-output-channel
+    scale is factored out of the K loop (``(x @ q) * scale``) — the jnp
+    twin of the fused Pallas kernel ``repro.kernels.quant
+    .matmul_dequant_int8``. Lossy (bounded by scale/2 per weight), so
+    gated behind ``allow_lossy`` like the bf16 kernel."""
+    name = "int8"
+    op_type = "linear"
+    bits = 8
+
+    def transform(self, raw, spec):
+        from repro import quant
+
+        out = quant.quantize_weight("w", np.asarray(raw["w"], np.float32),
+                                    bits=self.bits)
+        if "b" in raw:
+            out["b"] = raw["b"]
+        return out
+
+    def execute(self, w, x, spec):
+        y = jnp.dot(x, w["w:q8"].astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * w["w:qscale"]
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
+class LinearInt4(LinearInt8):
+    """Nibble-packed int4 cache entry: ~8x fewer cold cache bytes than f32.
+    Unpacks in-graph (the jnp twin of ``matmul_dequant_int4``) then runs
+    the same scale-factored matmul. Coarser than int8 — last rung of the
+    read-bytes ladder."""
+    name = "int4"
+    bits = 4
+
+    def execute(self, w, x, spec):
+        p = w["w:q4"].astype(jnp.int32)
+        lo = p & 0x0F
+        hi = (p >> 4) & 0x0F
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        K = spec.weight_shapes["w"][0]
+        q = jnp.stack([lo, hi], axis=1).reshape(
+            2 * p.shape[0], p.shape[1])[:K].astype(jnp.float32)
+        y = jnp.dot(x, q, preferred_element_type=jnp.float32) * w["w:qscale"]
+        if "b" in w:
+            y = y + w["b"]
+        return y
+
+
 # ---------------------------------------------------------------------------
 # conv2d kernels (NHWC, filters OIHW in raw checkpoints — ncnn-style)
 # ---------------------------------------------------------------------------
@@ -382,7 +434,7 @@ KERNEL_REGISTRY: Dict[str, List[Kernel]] = {
 }
 
 LOSSY_KERNELS: Dict[str, List[Kernel]] = {
-    "linear": [LinearLowPrecision()],
+    "linear": [LinearLowPrecision(), LinearInt8(), LinearInt4()],
 }
 
 

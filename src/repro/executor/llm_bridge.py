@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.configs.base import ArchConfig
 from repro.core.engine import ColdEngine
 from repro.core.pipeline import RunResult
@@ -61,6 +62,22 @@ class ColdLLMResult:
         when the exec chain started) and ``overlapped_packs`` (decode-path
         packs running concurrently with the exec chain)."""
         return self.first_token_s < self.decode_prep_s
+
+
+def _expand_quantized(w: Dict[str, Any],
+                      logical_shapes: Dict[str, tuple]) -> Dict[str, Any]:
+    """Quantized cache entries stage as companion groups (``base:q8`` /
+    ``base:q4`` + ``base:qscale``). The BatchedServer decode path wants the
+    logical tensors, so packing dequantizes them here; the quantized form
+    only serves the cold read + streamed prefill. ``logical_shapes`` (from
+    the layer spec) recovers an odd K that int4 packing rounded up."""
+    if not quant.is_quantized(w):
+        return w
+    groups, rest = quant.split_groups(w)
+    for base in groups:
+        rest[base] = quant.dequantize_weight(w, base,
+                                             logical_shapes.get(base))
+    return rest
 
 
 def _pack_params(cfg: ArchConfig, packed: Dict[str, Dict[str, Any]]):
@@ -101,6 +118,7 @@ def cold_start_llm(
     x = prompt[None, :]
     dtype = jnp.dtype(cfg.dtype)
     packed: Dict[str, Dict[str, Any]] = {}
+    shapes = {l.spec.name: l.spec.weight_shapes for l in engine.layers}
 
     def hook(graph, weights, lock):
         # decode-path packing: one task per weighted layer, scheduled after
@@ -113,6 +131,7 @@ def cold_start_llm(
             def fn(name=name):
                 with lock:
                     w = weights.get(name) or {}
+                w = _expand_quantized(w, shapes.get(name) or {})
                 packed[name] = {k: jnp.asarray(v, dtype)
                                 for k, v in w.items()}
 

@@ -1,0 +1,216 @@
+"""Dequantization Pallas kernels for the quantized transform cache.
+
+Two shapes of consumer for a folded int8 / packed-int4 cache extent
+(``repro.quant`` companion convention):
+
+  * ``dequant_int8`` / ``dequant_int4`` — dequant-on-the-fly: expand the
+    quantized block back to float32 (``q.astype(f32) * scale``), for ops
+    that need the full-precision tensor (e.g. feeding an existing fused
+    kernel).
+  * ``matmul_dequant_int8`` / ``matmul_dequant_int4`` — fused
+    dequant-matmul: the MXU consumes the quantized tile directly and the
+    per-output-channel scale is factored out of the K loop, applied ONCE
+    to the f32 accumulator at flush (``(x @ q) * scale``) — the dequant
+    cost is one multiply per output element instead of one per weight.
+
+int4 tiles arrive nibble-packed along K (rows ``2i``/``2i+1`` in the
+low/high nibble of one byte — see ``repro.quant.pack_int4``); the kernels
+unpack in VMEM, so HBM traffic stays at the packed byte count. Scales are
+per-output-channel, keepdims shape ``(1, N)``, symmetric (no zero point —
+the asymmetric int8 variant is a numpy-side concern).
+
+Validated in interpret mode against ref.dequant_*_ref /
+ref.matmul_dequant_*_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_tile(p_ref) -> jax.Array:
+    """Unpack a (bkp, bn) uint8 nibble tile to (2*bkp, bn) int-valued f32:
+    row 2i from the low nibble, 2i+1 from the high nibble, sign-extended."""
+    p = p_ref[...].astype(jnp.int32)
+    lo = p & 0x0F
+    hi = (p >> 4) & 0x0F
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    # (bkp, 2, bn) -> (2*bkp, bn) interleaves rows as lo0, hi0, lo1, hi1...
+    stacked = jnp.stack([lo, hi], axis=1)
+    return stacked.reshape(2 * p.shape[0], p.shape[1]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dequant-on-the-fly
+# ---------------------------------------------------------------------------
+def _dq8_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def dequant_int8(
+    q: jax.Array, scale: jax.Array, *,
+    bk: int = 128, bn: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """(K, N) int8 + (1, N) f32 scale -> (K, N) f32."""
+    K, N = q.shape
+    pad_k, pad_n = (-K) % bk, (-N) % bn
+    if pad_k or pad_n:
+        q = jnp.pad(q, ((0, pad_k), (0, pad_n)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_n)))
+    grid = (q.shape[0] // bk, q.shape[1] // bn)
+    out = pl.pallas_call(
+        _dq8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=interpret,
+    )(q, scale)
+    return out[:K, :N]
+
+
+def _dq4_kernel(p_ref, s_ref, o_ref):
+    o_ref[...] = _unpack_tile(p_ref) * s_ref[...]
+
+
+def dequant_int4(
+    packed: jax.Array, scale: jax.Array, K: int, *,
+    bk: int = 128, bn: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """((K+1)//2, N) packed uint8 + (1, N) scale -> (K, N) f32."""
+    assert bk % 2 == 0
+    Kp2, N = packed.shape
+    pad_kp, pad_n = (-Kp2) % (bk // 2), (-N) % bn
+    if pad_kp or pad_n:
+        # 0x00 bytes unpack to two zero rows — inert padding
+        packed = jnp.pad(packed, ((0, pad_kp), (0, pad_n)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_n)))
+    grid = (packed.shape[0] // (bk // 2), packed.shape[1] // bn)
+    out = pl.pallas_call(
+        _dq4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk // 2, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (2 * packed.shape[0], packed.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(packed, scale)
+    return out[:K, :N]
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-matmul — scale factored out of the K loop
+# ---------------------------------------------------------------------------
+def _mm_dq8_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], q_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        # per-output-channel scale applied once to the finished accumulator
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def matmul_dequant_int8(
+    x: jax.Array, q: jax.Array, scale: jax.Array, *,
+    bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K) float; q: (K, N) int8; scale: (1, N) f32 -> (M, N)."""
+    M, K = x.shape
+    K2, N = q.shape
+    assert K == K2
+    pad_m, pad_k, pad_n = (-M) % bm, (-K) % bk, (-N) % bn
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        q = jnp.pad(q, ((0, pad_k), (0, pad_n)))
+    if pad_n:
+        scale = jnp.pad(scale, ((0, 0), (0, pad_n)))
+    Mp, Kp, Np = M + pad_m, K + pad_k, N + pad_n
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm_dq8_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale)
+    return out[:M, :N]
+
+
+def _mm_dq4_kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], _unpack_tile(p_ref), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def matmul_dequant_int4(
+    x: jax.Array, packed: jax.Array, scale: jax.Array, K: int, *,
+    bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K) float; packed: ((K+1)//2, N) uint8 nibbles; scale: (1, N).
+
+    The weight tile stays packed through HBM->VMEM (half the bytes of an
+    int8 tile); nibbles unpack in VMEM right before the MXU dot.
+    """
+    assert bk % 2 == 0
+    M = x.shape[0]
+    Kp2, N = packed.shape
+    pad_kp, pad_n = (-Kp2) % (bk // 2), (-N) % bn
+    if pad_kp or pad_n:
+        packed = jnp.pad(packed, ((0, pad_kp), (0, pad_n)))
+    if pad_n:
+        scale = jnp.pad(scale, ((0, 0), (0, pad_n)))
+    Kp = 2 * packed.shape[0]  # logical K after padding (>= K)
+    pad_m = (-M) % bm
+    if x.shape[1] != Kp or pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, Kp - x.shape[1])))
+    Mp, Np = M + pad_m, packed.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm_dq4_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scale)
+    return out[:M, :N]

@@ -105,3 +105,38 @@ def winograd_tile_matmul_ref(V: jax.Array, U: jax.Array) -> jax.Array:
     """V: (16, T, C), U: (16, C, O) -> (16, T, O) batched matmul."""
     return jnp.einsum("ktc,kco->kto", V.astype(jnp.float32),
                       U.astype(jnp.float32)).astype(V.dtype)
+
+
+def unpack_int4_ref(packed: jax.Array, k: int) -> jax.Array:
+    """((K+1)//2, N) uint8 nibbles -> (k, N) sign-extended int values (f32).
+    Row 2i from the low nibble, 2i+1 from the high nibble — the jnp twin of
+    ``repro.quant.unpack_int4``."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0x0F
+    hi = (p >> 4) & 0x0F
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    full = jnp.stack([lo, hi], axis=1).reshape(
+        2 * packed.shape[0], packed.shape[1])
+    return full[:k].astype(jnp.float32)
+
+
+def dequant_int8_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def dequant_int4_ref(packed: jax.Array, scale: jax.Array, k: int) -> jax.Array:
+    return unpack_int4_ref(packed, k) * scale.astype(jnp.float32)
+
+
+def matmul_dequant_int8_ref(x: jax.Array, q: jax.Array,
+                            scale: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), dequant_int8_ref(q, scale),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_dequant_int4_ref(x: jax.Array, packed: jax.Array,
+                            scale: jax.Array, k: int) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   dequant_int4_ref(packed, scale, k),
+                   preferred_element_type=jnp.float32).astype(x.dtype)

@@ -22,6 +22,21 @@ _GUARDED_MODULES = {
 _PER_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "180"))
 
 
+@pytest.fixture
+def restore_flags():
+    """Snapshot/restore the runtime feature-flag dict around a test.
+
+    Any test that flips ``repro.models.runtime_flags.FLAGS`` (kv-cache
+    quantization, lossy kernel gates, ...) should depend on this fixture so
+    mutations never leak into later tests."""
+    from repro.models.runtime_flags import FLAGS
+
+    old = dict(FLAGS)
+    yield FLAGS
+    FLAGS.clear()
+    FLAGS.update(old)
+
+
 @pytest.fixture(autouse=True)
 def _fault_chaos_timeout_guard(request):
     mod = getattr(request.node.module, "__name__", "")

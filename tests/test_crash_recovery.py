@@ -1,4 +1,4 @@
-"""Crash-atomicity of super-bundle v3 in-place commits.
+"""Crash-atomicity of super-bundle (v3/v4) in-place commits.
 
 Covers: CRC-32C correctness (known vectors + reference implementation),
 journal record parsing with torn tails, every crash phase of the
@@ -12,7 +12,10 @@ error text.
 The invariant under test: after ANY injected tear, reopening the
 container succeeds, raw weights still serve byte-identically, and the
 affected cache entry is either fully applied or fully rolled back —
-``read_cached`` never returns torn bytes.
+``read_cached`` never returns torn bytes. Format-v4 quantized extents
+(int8 / packed int4 + header scale metadata) get the same guarantees: a
+torn quantized entry is dropped at open — never served — and recomputing
+it from raw yields a bit-identical clean write.
 """
 import struct
 
@@ -324,7 +327,7 @@ def _write_v2(path, name, arr):
         f.write(arr.tobytes())
 
 
-def test_v2_container_reads_and_upgrades_to_v3(tmp_path):
+def test_v2_container_reads_and_upgrades_to_current(tmp_path):
     p = tmp_path / "old.superbundle"
     arr = np.arange(40, dtype=np.float32)
     _write_v2(p, "w", arr)
@@ -336,7 +339,7 @@ def test_v2_container_reads_and_upgrades_to_v3(tmp_path):
     # so the journaled in-place commit refuses to run on it)
     assert set_cache_entry(p, "l", "k", {"w": arr}) == "rewrite"
     with SuperBundle(p, verify="eager") as sb:
-        assert sb.version == 3 and sb.generation == 1
+        assert sb.version == S.VERSION and sb.generation == 1
         assert all("crc32c" in e for e in sb._all_entries("l"))
 
 
@@ -354,7 +357,7 @@ def test_version_too_new_error_is_consistent(tmp_path):
     # the found and the supported version
     assert str(e1.value) == str(e2.value)
     assert str(p) in str(e1.value)
-    assert "99" in str(e1.value) and "3" in str(e1.value)
+    assert "99" in str(e1.value) and str(S.VERSION) in str(e1.value)
 
 
 # ---------------------------------------------------------------------------
@@ -703,6 +706,152 @@ def test_background_maintain_crash_surfaces_and_store_survives(
         np.ones(4096, np.float32))
     real = st.maintain()  # retry on the intact container heals
     assert real["compacted"] and real["reclaimed_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# quantized cache extents (format v4) under crashes
+# ---------------------------------------------------------------------------
+def _quant_model():
+    rng = np.random.default_rng(21)
+    return {"a": {"w": rng.standard_normal((40, 12)).astype(np.float32)},
+            "b": {"q": np.ones(30, np.int8)}}
+
+
+def _quant_entries(weights, seed):
+    """Deterministic int4 companions for layer a's weight. seed != 0 adds
+    an additive perturbation so old/new PAYLOAD bytes differ (a pure
+    rescale would quantize to identical int values and recovery would
+    rightly roll forward) while folded shapes stay identical."""
+    from repro import quant
+
+    w = weights["a"]["w"]
+    if seed:
+        rng = np.random.default_rng(100 + seed)
+        w = w + rng.standard_normal(w.shape).astype(np.float32)
+    return quant.quantize_weight("w", np.asarray(w, np.float32), bits=4)
+
+
+def _quant_store(tmp_path, name):
+    p = tmp_path / f"{name}.superbundle"
+    write_superbundle(p, _quant_model(), order=["a", "b"])
+    set_cache_entry(p, "a", "int4", _quant_entries(_quant_model(), 0))
+    return p
+
+
+def _crash_quant_commit(p, phase, partial=False):
+    def hook(ph, **ctx):
+        if ph != phase:
+            return
+        if partial and ph == "slot":
+            f, off, payload = ctx["file"], ctx["offset"], ctx["payload"]
+            f.seek(off)
+            f.write(payload[: len(payload) // 2])
+            f.flush()
+        raise InjectedCrash(ph)
+
+    S._crash_hook = hook
+    try:
+        with pytest.raises(InjectedCrash):
+            set_cache_entry(p, "a", "int4",
+                            _quant_entries(_quant_model(), 1))
+    finally:
+        S._crash_hook = None
+
+
+def _assert_quant_recovered(p, expect):
+    w = _quant_model()
+    want = _quant_entries(w, 0 if expect == "old" else 1)
+    with SuperBundle(p, verify="eager") as sb:
+        np.testing.assert_array_equal(
+            np.asarray(sb.read_raw("a", materialize=True)["w"]), w["a"]["w"])
+        if expect == "dropped":
+            # torn int4 extent: dropped at open, NEVER served
+            assert not sb.has_cached("a", "int4")
+            assert sb.read_cached("a", "int4", materialize=True) == {}
+            assert any(d["layer"] == "a" and d["kernel"] == "int4"
+                       for d in sb.dropped), sb.dropped
+        else:
+            got = sb.read_cached("a", "int4", materialize=True)
+            assert set(got) == set(want)
+            for k in want:
+                assert got[k].dtype == want[k].dtype, k
+                np.testing.assert_array_equal(np.asarray(got[k]), want[k])
+    assert journal_path(p).stat().st_size == 0
+
+
+@pytest.mark.parametrize("phase,partial,expect", [
+    ("journal-synced", False, "old"),
+    ("slot", True, "dropped"),
+    ("header", False, "new"),
+    ("header-written", False, "new"),
+])
+def test_quantized_extent_crash_phases(tmp_path, phase, partial, expect):
+    p = _quant_store(tmp_path, "q")
+    _crash_quant_commit(p, phase, partial=partial)
+    _assert_quant_recovered(p, expect)
+
+
+def test_torn_int4_entry_recomputes_from_raw_bit_identical(tmp_path):
+    """The degradation ladder's recompute-from-raw: after a torn int4
+    extent is dropped, re-running the transform on the (intact) raw bytes
+    and committing must produce a container byte-identical in content to
+    one that never crashed."""
+    p = _quant_store(tmp_path, "q")
+    _crash_quant_commit(p, "slot", partial=True)
+    _assert_quant_recovered(p, "dropped")
+    # ladder recompute: transform(raw) -> write. Quantization is
+    # deterministic, so this equals a clean write of the same entry.
+    with SuperBundle(p) as sb:
+        raw = {k: np.asarray(v, np.float32)
+               for k, v in sb.read_raw("a", materialize=True).items()}
+    recomputed = _quant_entries({"a": raw}, 1)
+    set_cache_entry(p, "a", "int4", recomputed)
+    clean = tmp_path / "clean.superbundle"
+    write_superbundle(clean, _quant_model(), order=["a", "b"])
+    set_cache_entry(clean, "a", "int4", _quant_entries(_quant_model(), 1))
+    with SuperBundle(p, verify="eager") as sb, \
+            SuperBundle(clean, verify="eager") as sc:
+        a = sb.read_cached("a", "int4", materialize=True)
+        b = sc.read_cached("a", "int4", materialize=True)
+        assert set(a) == set(b) == {"w:q4", "w:qscale"}
+        for k in a:
+            assert a[k].dtype == b[k].dtype
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+        assert not sb.dropped
+
+
+def test_pipeline_prep_rederives_quantized_entry_after_drop(tmp_path):
+    """Runtime rung of the same ladder: a use_cache layer whose quantized
+    entry was dropped must be re-derived from raw by the pipeline runtime
+    — bit-identical companions, never empty weights."""
+    import threading
+    import time as time_mod
+
+    from repro import quant
+    from repro.core.pipeline import PipelineRuntime
+    from repro.core.registry import LayerSpec, LinearInt4
+
+    st = LayerStore(tmp_path, fmt="super")
+    raw = _quant_model()["a"]
+    st.write_raw("l", raw)
+    st.read_raw("l")  # flush; NO cache entry exists for kernel "int4"
+
+    kern = LinearInt4()
+    spec = LayerSpec(name="l", op_type="linear",
+                     weight_shapes={"w": raw["w"].shape})
+    rt = PipelineRuntime([spec], {"l": kern}, {"l": True}, st,
+                         {"l": lambda w, x: x}, n_little=1)
+    weights, traces = {}, []
+    rt._prepare("l", weights, traces, "little", time_mod.perf_counter(),
+                threading.Lock())
+    want = kern.transform(dict(raw), spec)
+    assert set(weights["l"]) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(weights["l"][k]),
+                                      np.asarray(want[k]))
+    assert quant.is_quantized(
+        {k: np.asarray(v) for k, v in weights["l"].items()})
 
 
 def test_readers_race_crashing_compaction_see_only_committed_state(tmp_path):

@@ -2,22 +2,13 @@
 within quantization tolerance, and the state must actually be int8."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.runtime_flags import FLAGS
 
 
-@pytest.fixture(autouse=True)
-def _restore_flags():
-    old = dict(FLAGS)
-    yield
-    FLAGS.clear()
-    FLAGS.update(old)
-
-
-def test_int8_cache_decode_close_to_forward():
+def test_int8_cache_decode_close_to_forward(restore_flags):
     cfg = get_config("qwen3-32b").reduced()
     key = jax.random.PRNGKey(1)
     params = T.init_params(key, cfg)

@@ -1,0 +1,498 @@
+"""Quantized transform cache (super-bundle format v4) test suite.
+
+Pins the whole quantization stack:
+
+  * ``repro.quant`` numpy substrate — seeded random sweeps over shapes and
+    source dtypes with a HARD per-dtype reconstruction bound (half a
+    quantization step), per-channel scale edge cases (all-zero channel,
+    single-element channel, large-magnitude outliers), int4 odd-length
+    nibble packing, asymmetric int8 zero points;
+  * the fold/expand hooks: a companion group folds into one v4 extent and
+    expands back bit-identically;
+  * cross-format compatibility: a genuine v3 container opens read-identical
+    under v4 code, upgrades to v4 on its first rewrite, and a mixed
+    container (bf16 + int8 + int4 cache extents side by side) round-trips
+    bit-exactly through the journaled commit / replay path;
+  * the Pallas dequant kernels (interpret mode) against the jnp oracles in
+    ``repro.kernels.ref``, including odd-K int4 and non-block-multiple
+    shapes;
+  * the registered lossy kernels (``linear``/``tblock``/``lmhead``) and the
+    store-level bytes accounting ``decide()``'s read-cost model consumes.
+
+Property-style tests draw from seeded ``np.random`` generators (no
+hypothesis dependency in the image): every trial's parameters are in the
+assertion message, so a failure is replayable.
+"""
+import numpy as np
+import pytest
+
+import repro.checkpoint.superbundle as S
+from repro import quant
+from repro.checkpoint import LayerStore
+from repro.checkpoint.superbundle import (
+    SuperBundle, read_super_header, recover_journal, set_cache_entries,
+    set_cache_entry, write_superbundle,
+)
+
+
+# ---------------------------------------------------------------------------
+# quantize -> dequantize round-trip properties (seeded sweeps)
+# ---------------------------------------------------------------------------
+def _random_matrix(rng, K, N, src_dtype, scale_pow):
+    a = rng.standard_normal((K, N)) * (10.0 ** scale_pow)
+    if src_dtype == "bfloat16":
+        import ml_dtypes
+
+        return a.astype(ml_dtypes.bfloat16)
+    return a.astype(src_dtype)
+
+
+@pytest.mark.parametrize("bits,tag", [(8, "int8"), (4, "int4")])
+def test_roundtrip_error_bound_sweep(bits, tag):
+    """|w - dq(q(w))| <= scale/2 elementwise, for random shapes, source
+    dtypes, and magnitude regimes."""
+    rng = np.random.default_rng(1234 + bits)
+    for trial in range(40):
+        K = int(rng.integers(1, 97))
+        N = int(rng.integers(1, 97))
+        src = ["float32", "float64", "bfloat16"][trial % 3]
+        pw = float(rng.uniform(-3, 3))
+        a = _random_matrix(rng, K, N, src, pw)
+        comps = quant.quantize_weight("w", np.asarray(a, np.float32),
+                                      bits=bits)
+        back = quant.dequantize_weight(comps, "w", logical_shape=(K, N))
+        # (1 + 1e-5): exact-half ratios (common with bf16 sources) sit ON
+        # the bound and f32 rounding of q*scale can tip them a few ulps over
+        bound = quant.error_bound(comps["w:qscale"]) * (1 + 1e-5) + 1e-7
+        err = np.abs(np.asarray(a, np.float32) - back)
+        assert (err <= bound).all(), (trial, bits, src, K, N, pw,
+                                      float(err.max()), float(bound.max()))
+        # payloads carry the advertised storage dtype and shape
+        if bits == 8:
+            assert comps["w:q8"].dtype == np.int8
+            assert comps["w:q8"].shape == (K, N)
+        else:
+            assert comps["w:q4"].dtype == np.uint8
+            assert comps["w:q4"].shape == ((K + 1) // 2, N)
+        assert comps["w:qscale"].dtype == np.float32
+        assert comps["w:qscale"].shape == (1, N)
+
+
+def test_all_zero_channel_quantizes_exactly():
+    a = np.zeros((16, 4), np.float32)
+    a[:, 1] = np.linspace(-2, 2, 16)
+    for bits in (8, 4):
+        comps = quant.quantize_weight("w", a, bits=bits)
+        s = comps["w:qscale"]
+        assert s[0, 0] == 1.0 and s[0, 2] == 1.0 and s[0, 3] == 1.0
+        back = quant.dequantize_weight(comps, "w", logical_shape=a.shape)
+        # zero channels reconstruct EXACTLY, not just within bound
+        assert (back[:, 0] == 0).all() and (back[:, 3] == 0).all()
+
+
+def test_single_element_channel_is_exact_at_the_extreme():
+    """K=1: the sole element IS the absmax, so it lands on +/-qmax and
+    reconstructs to full precision of scale*qmax."""
+    a = np.array([[3.0, -0.125, 0.0]], np.float32)
+    for bits, qmax in ((8, 127), (4, 7)):
+        comps = quant.quantize_weight("w", a, bits=bits)
+        back = quant.dequantize_weight(comps, "w", logical_shape=a.shape)
+        np.testing.assert_allclose(back, a, rtol=1e-6, atol=1e-7)
+        s = comps["w:qscale"]
+        np.testing.assert_allclose(s[0, 0], 3.0 / qmax, rtol=1e-6)
+
+
+def test_large_magnitude_outlier_channel():
+    """A 1e20-scale outlier column must not poison its neighbors' scales
+    (per-channel isolation) and must still satisfy the hard bound."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((64, 8)).astype(np.float32)
+    a[:, 3] *= 1e20
+    for bits in (8, 4):
+        comps = quant.quantize_weight("w", a, bits=bits)
+        s = comps["w:qscale"][0]
+        assert s[3] > 1e17 and (s[np.arange(8) != 3] < 1.0).all()
+        back = quant.dequantize_weight(comps, "w", logical_shape=a.shape)
+        err = np.abs(a - back)
+        bound = quant.error_bound(comps["w:qscale"]) + 1e-7
+        assert (err <= bound).all(), bits
+
+
+def test_int4_odd_length_packing_roundtrip_sweep():
+    rng = np.random.default_rng(42)
+    for trial in range(30):
+        K = int(rng.integers(1, 64))
+        N = int(rng.integers(1, 32))
+        q = rng.integers(-7, 8, size=(K, N)).astype(np.int8)
+        packed = quant.pack_int4(q)
+        assert packed.shape == ((K + 1) // 2, N)
+        np.testing.assert_array_equal(quant.unpack_int4(packed, K), q)
+        if K % 2:
+            # the pad nibble is the encoding of 0 — inert under any scale
+            assert ((packed[-1] >> 4) == 0).all(), (trial, K, N)
+
+
+def test_asymmetric_int8_zero_point_roundtrip():
+    """Asymmetric int8 (skewed distributions): lo/hi map to -127/+127
+    exactly and the half-step bound still holds through (q - z) * s."""
+    rng = np.random.default_rng(11)
+    for trial in range(20):
+        K = int(rng.integers(2, 80))
+        a = (rng.standard_normal((K, 5)) + rng.uniform(-9, 9)) \
+            .astype(np.float32)
+        q, s, z = quant.quantize_int8(a, symmetric=False)
+        assert z is not None and z.dtype == np.int32
+        comps = {"w:q8": q, "w:qscale": s, "w:qzero": z}
+        back = quant.dequantize_weight(comps, "w")
+        err = np.abs(a - back)
+        assert (err <= quant.error_bound(s) + 1e-6).all(), \
+            (trial, float(err.max()), float(s.max()))
+        lo_col = a.argmin(axis=0)
+        for n, r in enumerate(lo_col):
+            assert q[r, n] == -127, trial
+
+
+def test_quantize_weights_passthrough_rules():
+    """Only 2-D float tensors of at least min_size quantize; biases, norm
+    gains, small and integer tensors pass through untouched."""
+    raw = {
+        "w": np.ones((8, 8), np.float32),
+        "b": np.arange(8, dtype=np.float32),          # 1-D: passthrough
+        "tiny": np.ones((2, 2), np.float32),          # < min_size
+        "lut": np.ones((8, 8), np.int32),             # integer
+    }
+    out = quant.quantize_weights(raw, bits=8)
+    assert set(out) == {"w:q8", "w:qscale", "b", "tiny", "lut"}
+    for k in ("b", "tiny", "lut"):
+        assert out[k] is raw[k] or np.shares_memory(out[k], raw[k]) or \
+            np.array_equal(out[k], raw[k])
+    groups, rest = quant.split_groups(out)
+    assert set(groups) == {"w"} and set(rest) == {"b", "tiny", "lut"}
+    assert quant.is_quantized(out) and not quant.is_quantized(raw)
+    # logical bytes = f32 bytes of the dequantized view
+    assert quant.logical_nbytes(out) == (64 * 4 + raw["b"].nbytes
+                                         + raw["tiny"].nbytes
+                                         + raw["lut"].nbytes)
+
+
+def test_fold_expand_bit_identical():
+    """split_groups + quant_meta + expand_entry is a bit-exact involution
+    — the super-bundle's v4 write/read path in miniature."""
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((33, 9)).astype(np.float32)
+    for bits, suf in ((8, ":q8"), (4, ":q4")):
+        comps = quant.quantize_weight("w", a, bits=bits)
+        groups, rest = quant.split_groups(comps)
+        assert rest == {} and set(groups) == {"w"}
+        meta = quant.quant_meta(groups["w"])
+        assert meta["scheme"] == ("int8" if bits == 8 else "int4")
+        back = quant.expand_entry("w", meta, groups["w"]["data"])
+        assert set(back) == set(comps)
+        for k in comps:
+            assert back[k].dtype == comps[k].dtype, k
+            np.testing.assert_array_equal(back[k], comps[k])
+    # a data key without its scale companion is NOT a group (stays plain)
+    groups, rest = quant.split_groups({"w:q8": np.ones(4, np.int8)})
+    assert groups == {} and set(rest) == {"w:q8"}
+
+
+# ---------------------------------------------------------------------------
+# Pallas dequant kernels vs jnp oracles (interpret mode)
+# ---------------------------------------------------------------------------
+_SHAPES_MKN = [(4, 37, 16), (8, 64, 130), (3, 129, 7), (2, 256, 256)]
+
+
+@pytest.mark.parametrize("M,K,N", _SHAPES_MKN)
+def test_pallas_dequant_matches_ref(M, K, N):
+    import jax.numpy as jnp
+
+    from repro.kernels import quant as kq
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(K * 131 + N)
+    a = rng.standard_normal((K, N)).astype(np.float32) * 3.0
+
+    q8, s8, _ = quant.quantize_int8(a)
+    got8 = np.asarray(kq.dequant_int8(jnp.asarray(q8), jnp.asarray(s8),
+                                      interpret=True))
+    want8 = np.asarray(ref.dequant_int8_ref(jnp.asarray(q8),
+                                            jnp.asarray(s8)))
+    np.testing.assert_array_equal(got8, want8)
+    assert (np.abs(a - got8) <= quant.error_bound(s8) + 1e-6).all()
+
+    p4, s4 = quant.quantize_int4(a)
+    got4 = np.asarray(kq.dequant_int4(jnp.asarray(p4), jnp.asarray(s4), K,
+                                      interpret=True))
+    want4 = np.asarray(ref.dequant_int4_ref(jnp.asarray(p4),
+                                            jnp.asarray(s4), K))
+    assert got4.shape == (K, N)
+    np.testing.assert_array_equal(got4, want4)
+    assert (np.abs(a - got4) <= quant.error_bound(s4) + 1e-6).all()
+
+
+@pytest.mark.parametrize("M,K,N", _SHAPES_MKN)
+def test_pallas_fused_dequant_matmul_matches_ref(M, K, N):
+    import jax.numpy as jnp
+
+    from repro.kernels import quant as kq
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(M * 7 + K * 13 + N)
+    x = rng.standard_normal((M, K)).astype(np.float32)
+    a = rng.standard_normal((K, N)).astype(np.float32)
+
+    q8, s8, _ = quant.quantize_int8(a)
+    got = np.asarray(kq.matmul_dequant_int8(
+        jnp.asarray(x), jnp.asarray(q8), jnp.asarray(s8), interpret=True))
+    want = np.asarray(ref.matmul_dequant_int8_ref(
+        jnp.asarray(x), jnp.asarray(q8), jnp.asarray(s8)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    p4, s4 = quant.quantize_int4(a)
+    got = np.asarray(kq.matmul_dequant_int4(
+        jnp.asarray(x), jnp.asarray(p4), jnp.asarray(s4), K,
+        interpret=True))
+    want = np.asarray(ref.matmul_dequant_int4_ref(
+        jnp.asarray(x), jnp.asarray(p4), jnp.asarray(s4), K))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_registered_lossy_linear_kernels_execute_within_bound():
+    """LinearInt8/LinearInt4 transform+execute must match the f32 matmul
+    within the propagated quantization bound (||x||_1 * scale/2)."""
+    import jax.numpy as jnp
+
+    from repro.core.registry import LayerSpec, LOSSY_KERNELS
+
+    rng = np.random.default_rng(0)
+    raw = {"w": rng.standard_normal((48, 24)).astype(np.float32),
+           "b": rng.standard_normal(24).astype(np.float32)}
+    x = rng.standard_normal((5, 48)).astype(np.float32)
+    spec = LayerSpec("l", "linear", weight_shapes={"w": (48, 24)})
+    want = x @ raw["w"] + raw["b"]
+    for kern in LOSSY_KERNELS["linear"]:
+        if kern.name not in ("int8", "int4"):
+            continue
+        tw = kern.transform(dict(raw), spec)
+        got = np.asarray(kern.execute(
+            {k: jnp.asarray(v) for k, v in tw.items()}, jnp.asarray(x),
+            spec))
+        bound = (np.abs(x).sum(axis=1, keepdims=True)
+                 * quant.error_bound(tw["w:qscale"])) + 1e-4
+        assert (np.abs(got - want) <= bound).all(), kern.name
+        # and distinctly better than noise
+        corr = np.corrcoef(got.ravel(), want.ravel())[0, 1]
+        assert corr > (0.999 if kern.name == "int8" else 0.98), kern.name
+
+
+# ---------------------------------------------------------------------------
+# container format v4: quantized extents end to end
+# ---------------------------------------------------------------------------
+def _mixed_cache(rng):
+    """bf16 + int8 + int4 cache entries for one layer, side by side."""
+    import ml_dtypes
+
+    a = rng.standard_normal((40, 12)).astype(np.float32)
+    return {
+        "bf16_cast": {"w": a.astype(ml_dtypes.bfloat16)},
+        "int8": quant.quantize_weight("w", a, bits=8),
+        "int4": quant.quantize_weight("w", a, bits=4),
+    }
+
+
+def _assert_weights_equal(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k].dtype == want[k].dtype, k
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+def test_v4_quantized_extent_roundtrip_and_header_layout(tmp_path):
+    """A quantized companion group folds into ONE extent whose payload is
+    exactly the quantized bytes (CRC over them) and whose header entry
+    carries the scales — and expands back bit-identically."""
+    rng = np.random.default_rng(5)
+    p = tmp_path / "m.superbundle"
+    raw = {"l": {"w": rng.standard_normal((40, 12)).astype(np.float32)}}
+    write_superbundle(p, raw, order=["l"])
+    caches = _mixed_cache(rng)
+    for kern, wdict in caches.items():
+        set_cache_entry(p, "l", kern, wdict)
+    hdr = read_super_header(p)
+    assert S.VERSION == 4
+    for kern, scheme, suf in (("int8", "int8", ":q8"),
+                              ("int4", "int4", ":q4")):
+        ents = hdr["layers"]["l"]["cache"][kern]
+        assert len(ents) == 1, kern  # folded: one extent per group
+        e = ents[0]
+        assert e["dtype"] == scheme and e["quant"]["scheme"] == scheme
+        assert e["nbytes"] == caches[kern]["w" + suf].nbytes
+        assert e["quant"]["scale"]["shape"] == [1, 12]
+    for mat in (False, True):
+        with SuperBundle(p, verify="eager") as sb:
+            for kern, wdict in caches.items():
+                _assert_weights_equal(
+                    sb.read_cached("l", kern, materialize=mat), wdict)
+
+
+def test_v4_inplace_refresh_preserves_quant_metadata(tmp_path):
+    """Replacing a quantized entry with same-shape payload commits in
+    place and the NEW scales land with the new bytes."""
+    rng = np.random.default_rng(6)
+    p = tmp_path / "m.superbundle"
+    write_superbundle(
+        p, {"l": {"w": rng.standard_normal((40, 12)).astype(np.float32)}},
+        order=["l"])
+    first = quant.quantize_weight(
+        "w", rng.standard_normal((40, 12)).astype(np.float32), bits=8)
+    assert set_cache_entry(p, "l", "int8", first) == "rewrite"
+    second = quant.quantize_weight(
+        "w", (rng.standard_normal((40, 12)) * 5).astype(np.float32), bits=8)
+    assert set_cache_entry(p, "l", "int8", second) == "inplace"
+    with SuperBundle(p, verify="eager") as sb:
+        _assert_weights_equal(
+            sb.read_cached("l", "int8", materialize=True), second)
+
+
+def test_mixed_container_roundtrips_through_journal_replay(tmp_path):
+    """bf16 + int8 + int4 extents refreshed in ONE journaled transaction,
+    torn before the header lands: replay must roll all three forward
+    bit-exactly."""
+    rng = np.random.default_rng(8)
+    p = tmp_path / "m.superbundle"
+    write_superbundle(
+        p, {"l": {"w": rng.standard_normal((40, 12)).astype(np.float32)}},
+        order=["l"])
+    old = _mixed_cache(rng)
+    for kern, wdict in old.items():
+        set_cache_entry(p, "l", kern, wdict)
+    new = _mixed_cache(rng)  # fresh draws, same shapes -> in-place slots
+
+    def hook(ph, **ctx):
+        if ph == "header":
+            raise S.InjectedCrash(ph)
+
+    S._crash_hook = hook
+    try:
+        with pytest.raises(S.InjectedCrash):
+            set_cache_entries(p, {("l", k): w for k, w in new.items()})
+    finally:
+        S._crash_hook = None
+    assert S.journal_path(p).stat().st_size > 0  # intent landed pre-crash
+    assert recover_journal(p) == []  # roll-forward: nothing dropped
+    assert S.journal_path(p).stat().st_size == 0  # drained
+    with SuperBundle(p, verify="eager") as sb:
+        assert not sb.dropped
+        for kern, wdict in new.items():
+            _assert_weights_equal(
+                sb.read_cached("l", kern, materialize=True), wdict)
+
+
+def test_v3_container_reads_identical_and_upgrades_on_rewrite(tmp_path):
+    """A genuine v3 container (authored by pinning VERSION=3: no quantized
+    extents, v3 header) opens read-identically under v4 code; the first
+    rewrite upgrades it to v4, after which quantized extents work."""
+    import ml_dtypes
+
+    rng = np.random.default_rng(9)
+    raw = {"l": {"w": rng.standard_normal((40, 12)).astype(np.float32)}}
+    bf16 = {"w": raw["l"]["w"].astype(ml_dtypes.bfloat16)}
+    p = tmp_path / "old.superbundle"
+    old_version = S.VERSION
+    S.VERSION = 3
+    try:
+        write_superbundle(p, raw, order=["l"])
+        set_cache_entry(p, "l", "bf16_cast", bf16)
+    finally:
+        S.VERSION = old_version
+    with SuperBundle(p, verify="eager") as sb:
+        assert sb.version == 3
+        _assert_weights_equal(sb.read_raw("l", materialize=True), raw["l"])
+        _assert_weights_equal(
+            sb.read_cached("l", "bf16_cast", materialize=True), bf16)
+    # first rewrite (growing append) stamps the current version...
+    q = quant.quantize_weight("w", raw["l"]["w"], bits=4)
+    assert set_cache_entry(p, "l", "int4", q) == "rewrite"
+    with SuperBundle(p, verify="eager") as sb:
+        assert sb.version == S.VERSION
+        _assert_weights_equal(
+            sb.read_cached("l", "bf16_cast", materialize=True), bf16)
+        _assert_weights_equal(sb.read_cached("l", "int4",
+                                             materialize=True), q)
+
+
+def test_layerstore_quantized_cache_roundtrip_and_bytes(tmp_path):
+    """LayerStore round-trips companion dicts through the buffered write /
+    flush / read path, and cached_bytes() (decide()'s read-cost input)
+    reports the FOLDED byte count — int4 ~1/8 of f32."""
+    rng = np.random.default_rng(10)
+    raw = {"w": rng.standard_normal((64, 32)).astype(np.float32)}
+    st = LayerStore(tmp_path, fmt="super")
+    st.write_raw("l", raw)
+    q8 = quant.quantize_weight("w", raw["w"], bits=8)
+    q4 = quant.quantize_weight("w", raw["w"], bits=4)
+    st.write_cached("l", "int8", q8)
+    st.write_cached("l", "int4", q4)
+    # pending (buffered) entries already serve and account correctly
+    _assert_weights_equal(st.read_cached("l", "int8", mmap=False), q8)
+    b8, b4 = st.cached_bytes("l", "int8"), st.cached_bytes("l", "int4")
+    fraw = st.raw_bytes("l")
+    assert b8 is not None and b4 is not None
+    assert b8 < fraw / 3 and b4 < fraw / 6, (b8, b4, fraw)
+    assert st.cache_bytes() > 0  # flush point
+    # on-disk accounting matches the pending-buffer accounting
+    assert st.cached_bytes("l", "int8") == b8
+    assert st.cached_bytes("l", "int4") == b4
+    _assert_weights_equal(st.read_cached("l", "int8", mmap=False), q8)
+    _assert_weights_equal(st.read_cached("l", "int4", mmap=False), q4)
+
+
+def test_async_submit_read_expands_quantized_extents(tmp_path):
+    """submit_read serves the expanded companion dict bit-exactly and the
+    reader's bytes_served counter advances by the FOLDED extent size."""
+    from repro.ioengine import IOEngine
+
+    rng = np.random.default_rng(12)
+    raw = {"w": rng.standard_normal((64, 32)).astype(np.float32)}
+    st = LayerStore(tmp_path, fmt="super")
+    st.write_raw("l", raw)
+    q4 = quant.quantize_weight("w", raw["w"], bits=4)
+    st.write_cached("l", "int4", q4)
+    st._super(flush_all=True)
+    served0 = st.bytes_served()
+    eng = IOEngine(backend="aio")
+    try:
+        h = st.submit_read_cached(eng, "l", "int4")
+        got = h.wait(10.0)
+        _assert_weights_equal(got, q4)
+        folded = q4["w:q4"].nbytes
+        assert st.bytes_served() - served0 == folded
+    finally:
+        eng.close()
+        st.close()
+
+
+def test_corrupt_quantized_payload_is_dropped_never_served(tmp_path):
+    """A flipped byte inside the quantized payload fails the extent CRC:
+    the entry drops (eager at open, lazy at first materializing read) and
+    raw still serves clean."""
+    rng = np.random.default_rng(13)
+    raw = {"w": rng.standard_normal((64, 32)).astype(np.float32)}
+    p = tmp_path / "m.superbundle"
+    write_superbundle(p, {"l": raw}, order=["l"])
+    set_cache_entry(p, "l", "int8",
+                    quant.quantize_weight("w", raw["w"], bits=8))
+    e = read_super_header(p)["layers"]["l"]["cache"]["int8"][0]
+    with open(p, "r+b") as f:
+        f.seek(e["offset"] + 3)
+        b = f.read(1)
+        f.seek(e["offset"] + 3)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with SuperBundle(p, verify="eager") as sb:
+        assert not sb.has_cached("l", "int8")
+        assert sb.dropped and sb.dropped[0]["kernel"] == "int8"
+        _assert_weights_equal(sb.read_raw("l", materialize=True), raw)
+    with SuperBundle(p, verify="lazy") as sb:
+        assert sb.read_cached("l", "int8", materialize=True) == {}
+        assert sb.dropped and sb.dropped[0]["kernel"] == "int8"
