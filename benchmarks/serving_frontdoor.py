@@ -12,6 +12,14 @@ Arms:
     queue delay, and over-deadline requests are shed with typed
     ``DeadlineExceeded`` BEFORE consuming a worker slot (dispatch
     counters unchanged).
+  * warm-transfer — two workers on an emulated-slow disk
+    (``--sim-disk-bytes-per-s``); w0 cold-starts from disk (the
+    no-transfer baseline), then a request pinned to w1 races a peer
+    warm-state fetch from w0's RAM against w1's local chains. Gates:
+    the race armed and the donor served it, w1's cold start read ≥2×
+    fewer local disk bytes than the baseline, the output is
+    bit-identical to w0's, and nothing leaked after the race (no I/O
+    in flight, no held pinned bytes, no stuck requests).
 
 ``--smoke`` hard-fails on any gate; CI runs it on every push.
 """
@@ -173,6 +181,106 @@ def run_priority(failures: list, *, image=16, width=0.25, n_batch=8):
         fd.shutdown()
 
 
+def _poll_health(fd, wid, pred, *, timeout=10.0):
+    """Wait for a worker heartbeat snapshot satisfying ``pred``; returns
+    the snapshot (or the last one seen on timeout)."""
+    deadline = time.monotonic() + timeout
+    h = fd._workers[wid].health or {}
+    while time.monotonic() < deadline:
+        h = fd._workers[wid].health or {}
+        if h and pred(h):
+            break
+        time.sleep(0.05)
+    return h
+
+
+def run_warm_transfer(failures: list, *, image=32, width=0.5,
+                      sim_disk_bytes_per_s=4e6):
+    root = tempfile.mkdtemp(prefix="nnv12_frontdoor_warm_")
+    # 'super' store fmt gives measured local-read-bytes accounting; the
+    # simulated disk bandwidth makes local read time REAL on CI hosts that
+    # would otherwise serve the store from page cache at memory speed
+    wargs = dict(WORKER_ARGS, store_fmt="super",
+                 sim_disk_bytes_per_s=sim_disk_bytes_per_s)
+    fd = FrontDoor(root + "/fd", n_workers=2, worker_args=wargs)
+    fd.start()
+    try:
+        fd.add_model("mnet", "repro.models.cnn:build_cnn",
+                     name="mobilenet", image=image, width=width)
+        _, x = build_cnn("mobilenet", image=image, width=width)
+
+        # w0's cold start IS the no-transfer baseline: no sibling holds the
+        # model yet, so every byte comes off its (emulated) local disk
+        h0 = _poll_health(fd, "w0", lambda h: "local_read_bytes" in h)
+        pre0 = int(h0.get("local_read_bytes") or 0)
+        r0 = fd.request("mnet", x, worker="w0").result(120)
+        # wait for a post-completion heartbeat: "mnet" resident means the
+        # job finished AND registered — only then is the byte count final
+        # and only then does the front door see w0 as a transfer donor
+        h0 = _poll_health(
+            fd, "w0", lambda h: "mnet" in (h.get("resident") or ()))
+        baseline = int(h0.get("local_read_bytes") or 0) - pre0
+        _gate(r0["worker"] == "w0" and baseline > 0,
+              f"warm-transfer: baseline cold start on w0 read "
+              f"{baseline} bytes from local disk", failures)
+
+        # w1 pinned: w0 is now a resident donor → the front door attaches
+        # it as a peer and w1's ColdServer arms the fetch race
+        h1 = _poll_health(fd, "w1", lambda h: "local_read_bytes" in h)
+        pre1 = int(h1.get("local_read_bytes") or 0)
+        r1 = fd.request("mnet", x, worker="w1").result(120)
+        # the fetch outcome is folded into server stats by a job-done
+        # callback — poll until a heartbeat carries it (and the engine
+        # reports the race's cancelled reads fully drained)
+        h1 = _poll_health(
+            fd, "w1",
+            lambda h: int((h.get("stats") or {})
+                          .get("peer_layers_fetched") or 0) > 0
+            and int((h.get("io_engine") or {}).get("in_flight", 1)) == 0)
+        s1 = h1.get("stats") or {}
+        local1 = int(h1.get("local_read_bytes") or 0) - pre1
+        hd = _poll_health(
+            fd, "w0",
+            lambda h: int((h.get("stats") or {})
+                          .get("transfers_served") or 0) > 0)
+        donor = hd.get("stats") or {}
+
+        _gate(r1["worker"] == "w1" and int(s1.get("peer_races") or 0) >= 1
+              and int(donor.get("transfers_served") or 0) >= 1,
+              f"warm-transfer: w1 raced a peer fetch and w0 served it "
+              f"(layers={s1.get('peer_layers_fetched')} "
+              f"bytes={s1.get('peer_bytes_fetched')})", failures)
+        _gate(2 * local1 <= baseline,
+              f"warm-transfer: w1 read >=2x fewer local disk bytes "
+              f"({local1} vs baseline {baseline})", failures)
+        diff = float(np.abs(np.asarray(r1["output"])
+                            - np.asarray(r0["output"])).max())
+        _gate(diff == 0.0,
+              f"warm-transfer: fetched-state output bit-identical to "
+              f"local cold start (max diff {diff:.1e})", failures)
+
+        io1 = h1.get("io_engine") or {}
+        fh = fd.health()
+        stuck = (sum(w["in_flight"] for w in fh["workers"].values())
+                 + sum(fh["queues"].values()) + fh["batch_in_flight"])
+        _gate(int(io1.get("in_flight", -1)) == 0
+              and int(io1.get("bytes_in_flight", -1)) == 0
+              and int(s1.get("peer_crc_failures") or 0) == 0
+              and stuck == 0,
+              f"warm-transfer: nothing leaked after the race "
+              f"(io_in_flight={io1.get('in_flight')} "
+              f"bytes_in_flight={io1.get('bytes_in_flight')} "
+              f"stuck={stuck})", failures)
+        print(f"  baseline_bytes={baseline} w1_local_bytes={local1} "
+              f"fetched_bytes={s1.get('peer_bytes_fetched')} "
+              f"races={s1.get('peer_races')} "
+              f"declined={s1.get('peer_races_declined')} "
+              f"donor_transfers={donor.get('transfers_served')}")
+        return r0, r1
+    finally:
+        fd.shutdown()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -182,6 +290,8 @@ def main(argv=None):
     run_failover(failures, **({"image": 24, "width": 0.4}
                               if args.smoke else {}))
     run_priority(failures)
+    run_warm_transfer(failures, **({"image": 24, "width": 0.4}
+                                   if args.smoke else {}))
     if failures:
         print(f"\n{len(failures)} gate(s) failed:", file=sys.stderr)
         for f in failures:

@@ -78,6 +78,9 @@ class _ImmediateRead:
     def nbytes(self) -> int:
         return sum(int(v.nbytes) for v in self._w.values())
 
+    def abort(self) -> None:
+        pass
+
     def release(self) -> None:
         pass
 
@@ -126,6 +129,13 @@ class _PendingBundleRead:
         if self._fd is not None:
             os.close(self._fd)
             self._fd = None
+
+    def abort(self) -> None:
+        """Flag-only interrupt for a waiter parked in emulated-disk pacing
+        (warm-state race loser); never touches the buffer — see
+        ``ReadTicket.interrupt``."""
+        if self._ticket is not None:
+            self._ticket.interrupt()
 
     def wait(self, timeout: Optional[float] = None) -> Dict[str, np.ndarray]:
         if self._result is not None:

@@ -861,6 +861,15 @@ class PendingLayerRead:
         self._result = out
         return out
 
+    def abort(self) -> None:
+        """Interrupt a waiter parked in the engine's emulated-disk pacing
+        (warm-state race loser): flags only — buffers are untouched, so a
+        waiter already past pacing (verifying/parsing views) completes
+        normally. ``release()`` still recycles everything at job end."""
+        if self._tickets is not None:
+            for _, t in self._tickets:
+                t.interrupt()
+
     def release(self) -> None:
         if self._tickets is not None:
             for _, t in self._tickets:

@@ -773,15 +773,17 @@ class ColdEngine:
         return rt
 
     def submit_cold(self, x, *, n_little: int = 3, work_stealing: bool = True,
-                    graph_hook=None,
-                    deadline_s: Optional[float] = None) -> PipelineJob:
+                    graph_hook=None, deadline_s: Optional[float] = None,
+                    peer_fetch=None) -> PipelineJob:
         """Non-blocking cold run: compile the plan's task graph and enqueue
         it on the shared pool (the ColdServer's admission path).
         ``deadline_s`` bounds the whole run end-to-end (typed
-        ``DeadlineExceeded`` from the pool watchdog once blown)."""
+        ``DeadlineExceeded`` from the pool watchdog once blown).
+        ``peer_fetch`` (a ``warmstate.PeerFetcher``) arms the peer
+        warm-state race — see ``PipelineRuntime.submit``."""
         rt = self._runtime(n_little=n_little, work_stealing=work_stealing)
         return rt.submit(jnp.asarray(x), self.plan, graph_hook=graph_hook,
-                         job_deadline_s=deadline_s)
+                         job_deadline_s=deadline_s, peer_fetch=peer_fetch)
 
     def run_cold(self, x, *, n_little: int = 3, mode: str = "nnv12") -> RunResult:
         """mode: nnv12 (full) | sequential (ncnn-like baseline) |

@@ -104,6 +104,31 @@ def plan_read_depth(
     return max(1, min(int(max_depth), int(depth)))
 
 
+#: conservative default for an unmeasured peer link — loopback and LAN both
+#: clear it comfortably, so an unwarmed estimate only *under*-claims transfer
+DEFAULT_LINK_BYTES_PER_S = 200e6
+
+
+def transfer_estimate(resident_bytes: int, link_bytes_per_s: float = 0.0,
+                      *, rtt_s: float = 0.0) -> float:
+    """Seconds to stream ``resident_bytes`` of warm state from a peer.
+
+    The peer-transfer cost model, deliberately as simple as
+    ``plan_read_depth``'s: one setup round-trip plus bytes over measured
+    link bandwidth.  Used in two places with the SAME arithmetic —
+    ``FrontDoor`` routing (prefer a non-resident worker when its peer
+    fetch beats the local cold estimate) and the per-cold-start decision
+    to arm ``fetch_remote`` race tasks at all — so routing and execution
+    never disagree about whether a transfer is worth it.  Bandwidth is an
+    EWMA measured from completed transfers; before any transfer has
+    completed, ``DEFAULT_LINK_BYTES_PER_S`` applies.  Deterministic: no
+    wall-clock sampling in here.
+    """
+    bw = float(link_bytes_per_s) if link_bytes_per_s > 0.0 \
+        else DEFAULT_LINK_BYTES_PER_S
+    return max(float(rtt_s), 0.0) + max(int(resident_bytes), 0) / bw
+
+
 # ---------------------------------------------------------------------------
 # candidate filtering (Algorithm 1, line 1)
 # ---------------------------------------------------------------------------

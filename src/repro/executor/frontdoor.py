@@ -27,10 +27,17 @@ adds the fault/latency tier the single-process server cannot provide:
     estimated queue delay exceeds the remaining budget) and requests for
     quarantined models are shed with typed faults *before* consuming a
     worker slot;
-  * **cache-aware routing** — heartbeat health snapshots carry each
-    worker's resident (device-warm) and previously-served (page-cache
-    warm) model sets; routing prefers the warmest capable worker and
-    falls back to least-loaded.
+  * **cost-based cache-aware routing** — heartbeat health snapshots carry
+    each worker's resident (device-warm) and previously-served
+    (page-cache warm) model sets, per-model resident byte counts, and its
+    measured peer-link bandwidth; routing scores every capable worker by
+    estimated time-to-result, where a non-resident worker's cold cost is
+    ``min(local cold estimate, peer transfer_estimate)`` — so the front
+    door can deliberately send a request to a *cold* worker when pulling
+    the warm state from a sibling's RAM beats that worker's disk. The
+    dispatched ``cold_start`` carries the matching ``peers`` list and the
+    worker races the transfer against its local prep chains
+    (``docs/warm_transfer.md``).
 
 Protocol (length-prefixed pickled dicts; workers connect back to the
 front door's listener): ``hello`` → (``add_model`` → ``model_ready``)*,
@@ -49,10 +56,11 @@ import threading
 import time
 from collections import OrderedDict, deque
 from pathlib import Path
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import repro
 from repro import faults as _faults
+from repro.core.scheduler import transfer_estimate
 from repro.faults import (
     DeadlineExceeded, Fault, HeartbeatPolicy, JobTimeout, ModelQuarantined,
     RepairLog, RestartPolicy, WorkerLost,
@@ -123,12 +131,14 @@ class FrontDoorRequest:
     """Client-side handle for one front-door request."""
 
     def __init__(self, rid: int, model: str, x, lane: str,
-                 deadline_s: Optional[float]):
+                 deadline_s: Optional[float],
+                 pinned: Optional[str] = None):
         self.rid = rid
         self.model = model
         self.x = x
         self.lane = lane
         self.deadline_s = deadline_s           # end-to-end budget
+        self.pinned = pinned                   # routing pin (benchmarks/ops)
         self.t0 = time.monotonic()
         self.attempts = 0                      # dispatch attempts (failovers)
         self.worker: Optional[str] = None
@@ -172,6 +182,7 @@ class _Worker:
         self.last_heartbeat = 0.0
         self.health: Dict[str, Any] = {}
         self.in_flight: Dict[int, FrontDoorRequest] = {}
+        self.warm_port: Optional[int] = None   # warm-state transfer port
         self.restarts = 0                      # completed restarts
         self.down_at: Optional[float] = None   # when it was declared lost
         self.restart_due: Optional[float] = None
@@ -306,6 +317,7 @@ class FrontDoor:
                 w.sock = sock
                 w.alive = True
                 w.last_heartbeat = time.monotonic()
+                w.warm_port = hello.get("warm_port")
                 w.down_at = None
                 w.restart_due = None
             threading.Thread(target=self._recv_loop, args=(w, sock),
@@ -341,10 +353,15 @@ class FrontDoor:
 
     # -- client API ----------------------------------------------------------
     def request(self, model: str, x, *, deadline_s: Optional[float] = None,
-                lane: str = INTERACTIVE) -> FrontDoorRequest:
+                lane: str = INTERACTIVE,
+                worker: Optional[str] = None) -> FrontDoorRequest:
         """Enqueue one request. Sheds with a typed fault — *before* the
         request ever holds a worker slot — when the model is in quarantine
-        or the budget cannot survive the queue + RPC floor."""
+        or the budget cannot survive the queue + RPC floor.
+        ``worker`` pins routing to one worker id (benchmark/operator lever
+        — e.g. forcing a second worker's cold start to measure the peer
+        warm-state transfer); the pin falls back to normal routing if that
+        worker is down."""
         if lane not in (INTERACTIVE, BATCH):
             raise ValueError(f"unknown lane {lane!r}")
         if model not in self._models:
@@ -374,7 +391,8 @@ class FrontDoor:
                         f"remaining budget {deadline_s:.3f}s — shed before "
                         f"queuing")
             self._rid += 1
-            req = FrontDoorRequest(self._rid, model, x, lane, deadline_s)
+            req = FrontDoorRequest(self._rid, model, x, lane, deadline_s,
+                                   pinned=worker)
             self.stats["requests"] += 1
             self._queues[lane].append(req)
             self._dispatch_cv.notify_all()
@@ -444,13 +462,62 @@ class FrontDoor:
             req = self._queues[BATCH].popleft()
         if req is None:
             return None
-        w = self._route_locked(req.model)
+        w = self._route_locked(req.model, pinned=req.pinned)
         if w is None:                   # lost the race for the last slot
             self._queues[req.lane].appendleft(req)
             return None
         return req, w
 
-    def _route_locked(self, model: str) -> Optional[_Worker]:
+    def _transfer_donors_locked(self, model: str
+                                ) -> List[Tuple[str, int, float]]:
+        """Alive workers holding ``model`` device-resident with a reachable
+        warm-state port: ``(wid, resident_bytes, link_bytes_per_s)`` —
+        both the routing cost model and the dispatched request's ``peers``
+        list come from here, so what routing assumed is what the worker
+        actually races against."""
+        donors = []
+        for w in self._workers.values():
+            if not w.alive or w.warm_port is None:
+                continue
+            h = w.health or {}
+            if model not in (h.get("resident") or ()):
+                continue
+            nbytes = int((h.get("resident_model_bytes") or {})
+                         .get(model) or 0)
+            if nbytes <= 0:
+                nbytes = int(h.get("resident_bytes") or 0)
+            donors.append((w.wid, nbytes,
+                           float(h.get("link_bytes_per_s") or 0.0)))
+        return donors
+
+    def _route_locked(self, model: str, *,
+                      pinned: Optional[str] = None) -> Optional[_Worker]:
+        """Cost-based routing: pick the worker with the lowest estimated
+        time-to-result, where a NON-resident worker's cold cost is
+        ``min(local cold estimate, peer transfer estimate)`` — the same
+        ``transfer_estimate`` arithmetic the worker's own race-arming
+        decision uses (``ColdServer._maybe_peer_fetch``), so the front
+        door can deliberately route to a cold worker when a sibling's RAM
+        beats that worker's disk:
+
+          resident        → svc                      (warm run)
+          served before   → svc + min(svc,  transfer)  (page cache warm)
+          never served    → svc + min(3·svc, transfer)  (cold disk)
+          queue delay     → + in_flight × svc
+
+        Cost ties (in particular before any completion seeds the model's
+        service-time EWMA, when every estimate is 0) break by warmth tier
+        (resident > served > cold) and then least-loaded — never a shed,
+        never a stall, exactly the pre-cost-model policy."""
+        if pinned is not None:
+            w = self._workers.get(pinned)
+            if w is not None and w.capacity(self.max_inflight) > 0:
+                return w
+            if w is not None and w.alive:
+                return None     # pinned worker is full: wait for its slot
+            # pinned worker is down — fall through to normal routing
+        svc = self._svc_ewma.get(model) or 0.0
+        donors = self._transfer_donors_locked(model)
         best, best_key = None, None
         for w in self._workers.values():
             if w.capacity(self.max_inflight) <= 0:
@@ -458,10 +525,19 @@ class FrontDoor:
             h = w.health or {}
             resident = model in (h.get("resident") or ())
             served = (h.get("served") or {}).get(model, 0) > 0
-            # maximize (resident, served, -load): warmest first, then
-            # emptiest
-            key = (resident, served, -len(w.in_flight))
-            if best_key is None or key > best_key:
+            if resident:
+                prep = 0.0
+            else:
+                local = svc * (1.0 if served else 3.0)
+                transfer = min(
+                    (transfer_estimate(nb, bw)
+                     for wid, nb, bw in donors if wid != w.wid),
+                    default=float("inf"))
+                prep = min(local, transfer) if donors else local
+            cost = prep + svc + len(w.in_flight) * svc
+            tier = 0 if resident else (1 if served else 2)
+            key = (cost, tier, len(w.in_flight))
+            if best_key is None or key < best_key:
                 best, best_key = w, key
         return best
 
@@ -476,10 +552,20 @@ class FrontDoor:
                 with self._lock:
                     self.stats["shed_deadline"] += 1
                 return
+        # sibling workers holding this model resident: the worker arms a
+        # warm-state fetch race against them iff the same transfer estimate
+        # routing just used says the peer beats its local disk
+        with self._lock:
+            peers = [{"host": "127.0.0.1", "port": self._workers[wid].warm_port,
+                      "resident_bytes": nb, "link_bytes_per_s": bw}
+                     for wid, nb, bw in
+                     self._transfer_donors_locked(req.model)
+                     if wid != w.wid]
         try:
             send_msg(w.sock, {"type": "cold_start", "rid": req.rid,
                               "model": req.model, "x": req.x,
-                              "deadline_s": remaining, "lane": req.lane},
+                              "deadline_s": remaining, "lane": req.lane,
+                              "peers": peers},
                      w.send_lock)
         except OSError:
             # socket died under us; the supervisor will fail this over

@@ -158,11 +158,23 @@ def cold_start_llm(
     overlapped = sum(1 for t in prep_traces if t.end > first_exec_start)
     overlapped_packs = sum(1 for t in pack_traces if t.start < first_token_s)
 
+    # packed decode params are now "present" on this worker: register them
+    # with the ColdServer so sibling workers' warm-state fetches can ride
+    # them over the transfer stream (the ``__packed__`` pseudo-layer),
+    # flattened to "layer/key" so they cross the wire as plain arrays
+    if server is not None and model_name is not None:
+        flat = {f"{lname}/{k}": np.asarray(v)
+                for lname, kv in packed.items() for k, v in kv.items()}
+        server.register_packed_state(model_name, flat)
+
     # decode continuation: stack params, replay prompt + token 1 into a KV
-    # slot, decode the rest greedily
+    # slot, decode the rest greedily; the KV allocation draws from the
+    # ColdServer's shared memory budget when one is serving this request
     params = _pack_params(cfg, packed)
     srv = BatchedServer(params, cfg, max_batch=1,
-                        max_len=int(prompt.size + max_new_tokens + 2))
+                        max_len=int(prompt.size + max_new_tokens + 2),
+                        budget=(server.budget if server is not None
+                                else None))
     tokens = [first_token]
     if max_new_tokens > 1:
         req = Request(rid=0,
@@ -178,6 +190,7 @@ def cold_start_llm(
         tokens += [int(tk) for tk in req.out_tokens]
     else:
         decode_ready_s = time.perf_counter() - job.t0
+    srv.close()     # return the KV reservation to the shared budget
 
     return ColdLLMResult(
         tokens=tokens, first_token=first_token,

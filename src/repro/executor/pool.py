@@ -319,7 +319,7 @@ class CorePool:
             "task_retries": 0, "deadline_expired": 0,
             "job_deadline_expired": 0,
             "lanes_quarantined": 0, "workers_replaced": 0,
-            "workers_lost": 0, "jobs_failed": 0,
+            "workers_lost": 0, "jobs_failed": 0, "tasks_cancelled": 0,
         }
         self.fault_injector = None  # repro.faults.FaultInjector ("task.*")
         self.watchdog_interval_s = watchdog_interval_s
@@ -580,6 +580,77 @@ class CorePool:
         self._worker_loop(f"little{j}",
                           lambda now: self._next_for_little(j, now),
                           "little", j)
+
+    def cancel_tasks(self, job: Job, tids: List[int], *,
+                     reason: str = "race_lost") -> int:
+        """Cancel the given tasks of ``job`` that have not started running.
+
+        The warm-state race's loser-retirement path: when a ``fetch_remote``
+        task lands a layer's staged weights first, the local
+        read→transform→stage chain is cancelled through here (and when the
+        local chain wins, the pending fetch task is).  Accounting mirrors
+        ``_fail_job_locked`` — a cancelled task counts done, a cancelled
+        prep decrements ``_prep_left`` (so preps-done still fires EXACTLY
+        once and the admission slot is released), and each cancelled task's
+        children are unblocked (``_mark_ready`` only fires for children
+        still ``_PENDING``, so a cancelled sibling is never resurrected) —
+        but the job stays healthy: no error, no cancellation of anything
+        outside ``tids``.
+
+        Tasks already ``_RUNNING`` are left alone — their normal completion
+        path owns the accounting, and task fns are value-idempotent so
+        letting a lost racer drain is harmless.  Returns the number
+        actually cancelled."""
+        fire_preps = False
+        finished = False
+        cancelled: List[int] = []
+        with self._cv:
+            for tid in tids:
+                if job._state[tid] not in (_PENDING, _READY):
+                    continue
+                t = job.graph.tasks[tid]
+                if job._state[tid] == _READY:
+                    if tid in job._ready_big:
+                        job._ready_big.remove(tid)
+                    elif tid in job._ready_any:
+                        job._ready_any.remove(tid)
+                    else:
+                        for rl in job._ready_little.values():
+                            if tid in rl:
+                                rl.remove(tid)
+                                break
+                job._state[tid] = _CANCELLED
+                job._done_count += 1
+                if t.kind in PREP_KINDS:
+                    job._prep_left -= 1
+                cancelled.append(tid)
+            if cancelled:
+                self.health["tasks_cancelled"] += len(cancelled)
+                job.fault_events.append({
+                    "action": "cancel", "reason": reason,
+                    "tasks": [f"{job.graph.tasks[i].layer}/"
+                              f"{job.graph.tasks[i].kind}"
+                              for i in cancelled]})
+                for tid in cancelled:
+                    for child in job._children[tid]:
+                        job._pending[child] -= 1
+                        if job._pending[child] == 0 \
+                                and job._state[child] == _PENDING:
+                            job._mark_ready(child)
+                if job._prep_left == 0 and not job._preps_fired:
+                    job._preps_fired = True
+                    fire_preps = True
+                finished = job._finished()
+                if finished and job in self._jobs:
+                    self._jobs.remove(job)
+                    self.jobs_completed += 1
+                    job.total_s = time.perf_counter() - job.t0
+                self._cv.notify_all()
+        if fire_preps:
+            job._fire_preps_callbacks()
+        if finished:
+            job._fire_done()
+        return len(cancelled)
 
     def _fail_job_locked(self, job: Job, tid: int,
                          err: BaseException) -> Tuple[bool, bool]:

@@ -31,14 +31,17 @@ import threading
 import time
 from collections import OrderedDict
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
+import numpy as np
 
 from repro.core.engine import ColdEngine, LayerDef
 from repro.core.pipeline import PipelineJob, RunResult
 from repro.core.profiler import ProfileDB
+from repro.core.scheduler import transfer_estimate
 from repro.executor.pool import CorePool, get_core_pool
+from repro.executor.warmstate import PACKED_LAYER, PeerFetcher
 from repro.faults import DeadlineExceeded, ModelQuarantined
 
 
@@ -48,6 +51,89 @@ def _weights_nbytes(weights: Optional[Dict[str, Any]]) -> int:
         for v in w.values():
             total += int(getattr(v, "nbytes", 0))
     return total
+
+
+class MemoryBudget:
+    """One accounted device-memory pool shared by every consumer.
+
+    The ColdServer's staged-weight LRU and the LLM ``BatchedServer``'s
+    KV-cache allocator both draw from this single pool: each ``reserve``
+    is tagged, and when a reservation would overflow ``total_bytes`` the
+    registered evictors (the ColdServer's LRU) free least-recently-used
+    staged weights first.  ``reserve`` never refuses — a KV allocation is
+    a correctness requirement — it evicts what it can and returns whether
+    the pool is still within budget, so callers (and the warm-state
+    transfer server's memory-pressure refusal) can see the overcommit.
+    ``total_bytes=None`` disables the cap but keeps the accounting."""
+
+    def __init__(self, total_bytes: Optional[int] = None):
+        self.total = (None if total_bytes is None else int(total_bytes))
+        self._lock = threading.Lock()
+        self._used: Dict[str, int] = {}
+        self._evictors: List[Callable[[int], int]] = []
+
+    def add_evictor(self, cb: Callable[[int], int]) -> None:
+        """``cb(need_bytes) -> freed_bytes``; must not call ``reserve``."""
+        self._evictors.append(cb)
+
+    def used(self) -> int:
+        with self._lock:
+            return sum(self._used.values())
+
+    def used_by(self, tag: str) -> int:
+        with self._lock:
+            return int(self._used.get(tag, 0))
+
+    def over_budget(self) -> bool:
+        return self.total is not None and self.used() > self.total
+
+    def charge(self, tag: str, nbytes: int) -> None:
+        """Unconditional accounting (no eviction)."""
+        with self._lock:
+            self._used[tag] = self._used.get(tag, 0) + int(nbytes)
+
+    def release(self, tag: str, nbytes: Optional[int] = None) -> None:
+        with self._lock:
+            if nbytes is None:
+                self._used.pop(tag, None)
+            else:
+                left = self._used.get(tag, 0) - int(nbytes)
+                if left > 0:
+                    self._used[tag] = left
+                else:
+                    self._used.pop(tag, None)
+
+    def reserve(self, tag: str, nbytes: int) -> bool:
+        """Charge ``nbytes`` to ``tag``, evicting LRU state to make room.
+        True = within budget afterwards; False = overcommitted (charged
+        anyway — the evictors could not free enough)."""
+        nbytes = int(nbytes)
+        if self.total is None:
+            self.charge(tag, nbytes)
+            return True
+        while True:
+            with self._lock:
+                if sum(self._used.values()) + nbytes <= self.total:
+                    self._used[tag] = self._used.get(tag, 0) + nbytes
+                    return True
+                need = sum(self._used.values()) + nbytes - self.total
+            freed = 0
+            for ev in self._evictors:
+                try:
+                    freed += ev(need - freed)
+                except Exception:
+                    continue
+                if freed >= need:
+                    break
+            if freed <= 0:
+                self.charge(tag, nbytes)
+                return False
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"total": self.total,
+                    "used": sum(self._used.values()),
+                    "by_tag": dict(self._used)}
 
 
 class ColdStart:
@@ -101,15 +187,23 @@ class ColdServer:
         max_read_bytes_in_flight: Optional[int] = None,
         idle_compaction: bool = True,
         idle_compaction_min_interval_s: float = 0.25,
+        budget: Optional[MemoryBudget] = None,
     ):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.pool = pool or get_core_pool(n_little=n_little, n_big=n_big)
         self.n_little = n_little
         self.max_concurrent_preps = max_concurrent_preps
-        self.memory_budget_bytes = memory_budget_bytes
+        # one accounted device-memory pool: staged-weight residency (this
+        # server's LRU), packed decode params, and — when the same budget
+        # is handed to a BatchedServer — KV-cache growth all draw from it
+        self.budget = budget if budget is not None \
+            else MemoryBudget(memory_budget_bytes)
+        self.budget.add_evictor(self._evict_for_budget)
         # one user-level profile DB shared by every managed engine: sibling
         # models with equivalent shape classes skip profiling entirely
+        # (NOTE: ``memory_budget_bytes`` is a live property over
+        # ``budget.total`` — assigning it retunes the shared pool)
         self.profile_db: Optional[ProfileDB] = (
             ProfileDB(self.root / "profile_db.json") if share_profile_db
             else None)
@@ -127,7 +221,20 @@ class ColdServer:
                       "max_active_preps": 0, "cold_starts": 0,
                       "load_failures": 0, "quarantined": 0,
                       "idle_compactions": 0, "idle_compaction_bytes": 0,
-                      "idle_reprofiles": 0, "warm_runs": 0}
+                      "idle_reprofiles": 0, "warm_runs": 0,
+                      "warm_batches": 0, "peer_races": 0,
+                      "peer_races_declined": 0, "peer_layers_fetched": 0,
+                      "peer_bytes_fetched": 0, "peer_crc_failures": 0,
+                      "peer_refusals": 0, "transfers_served": 0,
+                      "transfer_refusals": 0}
+        # packed decode params (LLM bridge) by model — servable over the
+        # warm-state channel under the reserved ``__packed__`` pseudo-layer
+        self._packed_state: Dict[str, Dict[str, Any]] = {}
+        # peer link bandwidth EWMA, seeded by the first measured transfer;
+        # feeds the same transfer_estimate the front door routes with
+        self._link_bw: Optional[float] = None
+        # test/operator lever: refuse every warm-state transfer request
+        self.refuse_transfers = False
         # graceful drain (front-door worker handoff): _draining refuses new
         # admissions; _outstanding counts in-flight cold starts end-to-end
         # (admission -> job done), so drain() can wait the tail out
@@ -178,15 +285,23 @@ class ColdServer:
 
     # -- serving ------------------------------------------------------------
     def cold_start(self, name: str, x, *, n_little: Optional[int] = None,
-                   graph_hook=None,
-                   deadline_s: Optional[float] = None) -> ColdStart:
+                   graph_hook=None, deadline_s: Optional[float] = None,
+                   peers: Optional[Sequence[Dict[str, Any]]] = None,
+                   ) -> ColdStart:
         """Admit one cold-start request (blocks while ``max_concurrent_preps``
         jobs are in their prep phase) and submit its task graph.
 
         ``deadline_s`` is the request's remaining end-to-end budget — it
         becomes the job's watchdog deadline (typed ``DeadlineExceeded``
         once blown), and a budget already too small to cover the queue is
-        shed HERE, before the admission semaphore is touched."""
+        shed HERE, before the admission semaphore is touched.
+
+        ``peers`` lists sibling workers holding this model resident
+        (``{"host", "port", "resident_bytes", "link_bytes_per_s"?}``).
+        When the best peer's ``transfer_estimate`` beats the plan's local
+        cold estimate, the job is armed with a :class:`PeerFetcher` and
+        every local prep chain races a ``fetch_remote`` task — see
+        ``docs/warm_transfer.md``."""
         eng = self.engines[name]
         now = time.monotonic()
         with self._lock:
@@ -227,17 +342,71 @@ class ColdServer:
                 self.stats["max_active_preps"], self.stats["active_preps"])
             self._outstanding += 1
             self._served[name] = self._served.get(name, 0) + 1
+        peer_fetch = self._maybe_peer_fetch(name, peers) if peers else None
         try:
             job = eng.submit_cold(x, n_little=n_little or self.n_little,
                                   graph_hook=graph_hook,
-                                  deadline_s=deadline_s)
+                                  deadline_s=deadline_s,
+                                  peer_fetch=peer_fetch)
         except BaseException:
+            if peer_fetch is not None:
+                peer_fetch.close()
             self._release_prep_slot()
             self._request_done()
             raise
         job.job.add_preps_callback(lambda _job: self._release_prep_slot())
         job.job.add_done_callback(lambda _job: self._request_done())
+        if peer_fetch is not None:
+            job.job.add_done_callback(
+                lambda _job: self._note_fetch_stats(peer_fetch))
         return ColdStart(self, name, job)
+
+    # -- peer warm-state transfer (docs/warm_transfer.md) --------------------
+    def _maybe_peer_fetch(self, name: str,
+                          peers: Sequence[Dict[str, Any]]
+                          ) -> Optional[PeerFetcher]:
+        """Arm the fetch race iff the best peer's transfer estimate beats
+        the plan's local cold estimate — the SAME ``transfer_estimate``
+        arithmetic the front door routes with, so routing and execution
+        never disagree about when a transfer is worth it."""
+        eng = self.engines[name]
+        with self._lock:
+            link_bw = self._link_bw
+        best = None
+        for p in peers:
+            bw = float(p.get("link_bytes_per_s") or link_bw or 0.0)
+            est = transfer_estimate(int(p.get("resident_bytes") or 0), bw)
+            if best is None or est < best[0]:
+                best = (est, p)
+        if best is None:
+            return None
+        # local cold estimate: the plan's simulated makespan (read +
+        # transform + stage + exec). 0.0 = fallback/degraded plan, cost
+        # unknown — peer RAM almost always beats cold disk, so arm.
+        local_est = float(eng.plan.est_makespan) if eng.plan else 0.0
+        if local_est > 0.0 and best[0] >= local_est:
+            with self._lock:
+                self.stats["peer_races_declined"] += 1
+            return None
+        with self._lock:
+            self.stats["peer_races"] += 1
+        host, port = best[1]["host"], int(best[1]["port"])
+        return PeerFetcher(name, [(host, port)], io_engine=self.io_engine,
+                           injector=eng.fault_injector)
+
+    def _note_fetch_stats(self, pf: PeerFetcher) -> None:
+        """Job-done hook: fold the race's outcome into the server stats and
+        the link-bandwidth EWMA the next routing decision uses."""
+        s = pf.stats
+        with self._lock:
+            self.stats["peer_layers_fetched"] += int(s["layers_fetched"])
+            self.stats["peer_bytes_fetched"] += int(s["bytes_fetched"])
+            self.stats["peer_crc_failures"] += int(s["crc_failures"])
+            self.stats["peer_refusals"] += int(s["refused"])
+            bw = float(s.get("measured_bytes_per_s") or 0.0)
+            if bw > 0.0:
+                self._link_bw = (bw if self._link_bw is None
+                                 else 0.7 * self._link_bw + 0.3 * bw)
 
     def _request_done(self):
         with self._drain_cv:
@@ -378,12 +547,25 @@ class ColdServer:
                                in self._model_quarantine.items()},
                 "resident": list(self._resident),
                 "resident_bytes": sum(self._resident.values()),
+                "resident_model_bytes": dict(self._resident),
                 "models": list(self.engines),
                 "served": dict(self._served),
                 "outstanding": int(self._outstanding),
                 "draining": bool(self._draining),
+                "link_bytes_per_s": float(self._link_bw or 0.0),
             }
         snap["pool"] = dict(getattr(self.pool, "health", {}) or {})
+        snap["budget"] = self.budget.snapshot()
+        # bytes this worker's engines pulled off the LOCAL disk — the CI
+        # warm-transfer gate's numerator (peer-transferred bytes count in
+        # stats["peer_bytes_fetched"] instead, never here)
+        total_read = 0
+        for eng in self.engines.values():
+            try:
+                total_read += int(eng.store.bytes_served())
+            except Exception:
+                pass
+        snap["local_read_bytes"] = total_read
         if self.io_engine is not None:
             snap["io_engine"] = self.io_engine.snapshot()
         return snap
@@ -421,19 +603,44 @@ class ColdServer:
         nbytes = _weights_nbytes(res.weights)
         if not nbytes:
             return
-        evict: List[str] = []
         with self._lock:
-            self._resident_weights[name] = res.weights
-            self._resident.pop(name, None)
+            old = self._resident.pop(name, None)
             self._resident[name] = nbytes
-            if self.memory_budget_bytes is not None:
-                while (sum(self._resident.values()) > self.memory_budget_bytes
-                       and len(self._resident) > 1):
-                    victim, _ = self._resident.popitem(last=False)
-                    self._resident_weights.pop(victim, None)
-                    evict.append(victim)
-                    self.stats["evictions"] += 1
-        # dropping the dict refs is the eviction; XLA frees the buffers
+            self._resident_weights[name] = res.weights
+        if old:
+            self.budget.release(f"staged:{name}", old)
+        # reserve OUTSIDE self._lock: the budget's evictors re-enter the
+        # server lock to pop LRU victims (dropping the dict refs is the
+        # eviction; XLA frees the buffers)
+        self.budget.reserve(f"staged:{name}", nbytes)
+
+    def _evict_for_budget(self, need: int) -> int:
+        """MemoryBudget evictor: free least-recently-used staged weights
+        (always keeping the newest model) until ``need`` bytes are freed
+        or nothing evictable remains. Returns bytes freed."""
+        freed = 0
+        while freed < need:
+            with self._lock:
+                if len(self._resident) <= 1:
+                    break
+                victim, nb = self._resident.popitem(last=False)
+                self._resident_weights.pop(victim, None)
+                self.stats["evictions"] += 1
+            self.budget.release(f"staged:{victim}", nb)
+            freed += nb
+        return freed
+
+    @property
+    def memory_budget_bytes(self) -> Optional[int]:
+        """Live view over the shared pool's cap: assigning retunes
+        ``budget.total`` (residency, packed params, and KV all share it),
+        so operator code that always adjusted this attribute keeps
+        working against the pooled accounting."""
+        return self.budget.total
+
+    @memory_budget_bytes.setter
+    def memory_budget_bytes(self, v: Optional[int]) -> None:
+        self.budget.total = None if v is None else int(v)
 
     def resident_models(self) -> List[str]:
         with self._lock:
@@ -446,4 +653,91 @@ class ColdServer:
     def evict(self, name: str) -> bool:
         with self._lock:
             self._resident_weights.pop(name, None)
-            return self._resident.pop(name, None) is not None
+            nb = self._resident.pop(name, None)
+        if nb is not None:
+            self.budget.release(f"staged:{name}", nb)
+        return nb is not None
+
+    # -- warm-state transfer serving (docs/warm_transfer.md) -----------------
+    def resident_state_for_transfer(self, name: str, *, packed: bool = False):
+        """The ``WarmStateServer``'s data source: ``(state, reason)`` where
+        ``state`` is ``{layer: {key: array}}`` or None (refusal).
+
+        Refuses rather than serves a partial answer when the model is not
+        resident, the server is draining, the shared memory budget is
+        overcommitted (serving a transfer materializes ``tobytes`` copies
+        — exactly the wrong moment to add pressure), or the operator flag
+        ``refuse_transfers`` is set.  ``packed=True`` additionally rides
+        the registered packed decode params under ``__packed__``."""
+        with self._lock:
+            if self.refuse_transfers:
+                self.stats["transfer_refusals"] += 1
+                return None, "refused by operator"
+            if self._draining:
+                self.stats["transfer_refusals"] += 1
+                return None, "draining"
+            weights = self._resident_weights.get(name)
+            if weights is None:
+                self.stats["transfer_refusals"] += 1
+                return None, "not resident"
+            state = {lname: dict(kv) for lname, kv in weights.items() if kv}
+            if packed:
+                pk = self._packed_state.get(name)
+                if pk:
+                    state[PACKED_LAYER] = dict(pk)
+            self._resident.move_to_end(name)    # a transfer is a warm use
+            self.stats["transfers_served"] += 1
+        if self.budget.over_budget():
+            with self._lock:
+                self.stats["transfers_served"] -= 1
+                self.stats["transfer_refusals"] += 1
+            return None, "memory pressure"
+        return state, "ok"
+
+    def register_packed_state(self, name: str, params: Dict[str, Any]):
+        """Packed decode-path params (the LLM bridge's ``pack`` output):
+        kept servable over the warm-state channel under the reserved
+        ``__packed__`` pseudo-layer, charged to the shared budget."""
+        flat = {k: np.asarray(v) for k, v in params.items()
+                if getattr(v, "nbytes", None) is not None}
+        if not flat:
+            return
+        nbytes = sum(int(v.nbytes) for v in flat.values())
+        with self._lock:
+            old = self._packed_state.pop(name, None)
+            self._packed_state[name] = flat
+        if old is not None:
+            self.budget.release(f"packed:{name}")
+        self.budget.reserve(f"packed:{name}", nbytes)
+
+    # -- warm-run batching (front-door worker coalescing) --------------------
+    def warm_run_many(self, name: str, xs: Sequence[Any]
+                      ) -> Optional[List[RunResult]]:
+        """Serve N queued same-model warm requests in ONE per-layer sweep:
+        layer i's compiled executable runs N times back-to-back against the
+        resident weights before moving to layer i+1 — the ``BatchedServer``
+        drain pattern applied to warm CNN serving (icache/weight locality,
+        one LRU touch, one stats update) instead of N serial ``warm_run``
+        walks.  None = not resident (callers fall back to cold starts)."""
+        if not xs:
+            return []
+        with self._lock:
+            weights = self._resident_weights.get(name)
+            if weights is None:
+                return None
+            self._resident.move_to_end(name)
+            self.stats["warm_runs"] += len(xs)
+            self.stats["warm_batches"] += 1
+            self._served[name] = self._served.get(name, 0) + len(xs)
+        eng = self.engines[name]
+        rt = eng._runtime(n_little=self.n_little, work_stealing=True)
+        t0 = time.perf_counter()
+        ys = [jax.numpy.asarray(x) for x in xs]
+        for lname in rt.order:
+            fn = rt.jitted[lname]
+            w = weights.get(lname, {})
+            ys = [fn(w, y) for y in ys]
+        jax.block_until_ready(ys)
+        total = time.perf_counter() - t0
+        return [RunResult(output=y, total_s=total, weights=weights)
+                for y in ys]

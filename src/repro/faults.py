@@ -109,6 +109,13 @@ class ModelQuarantined(TransientFault):
     repeated load failures. ``retry_after`` says when to try again."""
 
 
+class FetchFault(TransientFault):
+    """A peer warm-state fetch failed (refused, disconnected, or a chunk
+    failed its CRC). Transient by design: the local read→transform chain is
+    always racing the fetch, so the caller falls back to disk rather than
+    retrying the wire."""
+
+
 # -- permanents --------------------------------------------------------------
 
 class IntegrityFault(PermanentFault):
@@ -231,10 +238,14 @@ SITE_FAULTS = {
     "store.read_cached": ReadFault,
     "ioengine.submit": ReadFault,
     "ioengine.reap": ReadFault,
+    "ioengine.charge": FetchFault,
     "task.read": ReadFault,
     "task.transform": TransformFault,
     "task.stage": StageFault,
     "task.execute": ExecuteFault,
+    "task.fetch_remote": FetchFault,
+    "warmstate.fetch": FetchFault,
+    "warmstate.chunk": FetchFault,
     "kernel.execute": KernelFault,
 }
 

@@ -63,6 +63,7 @@ import queue
 import struct
 import tempfile
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -70,10 +71,17 @@ import numpy as np
 from repro.faults import ReadFault, StageFault, classify
 
 __all__ = [
-    "IOEngine", "ReadTicket", "PinnedBufferPool", "PinnedBuffer",
-    "StageEngine", "get_io_engine", "reset_io_engine", "get_stage_engine",
-    "reset_stage_engine", "available_backends",
+    "IOEngine", "ReadTicket", "ReadAbandoned", "TransferCharge",
+    "PinnedBufferPool", "PinnedBuffer", "StageEngine", "get_io_engine",
+    "reset_io_engine", "get_stage_engine", "reset_stage_engine",
+    "available_backends",
 ]
+
+
+class ReadAbandoned(Exception):
+    """The waiter's read was abandoned mid-wait (e.g. a warm-state fetch
+    won the race for its layer). Control-flow signal, not a fault: the
+    caller bails out of the chain instead of retrying."""
 
 ENV_ENGINE = "REPRO_IO_ENGINE"
 ENV_STAGE = "REPRO_STAGE_ENGINE"
@@ -237,7 +245,7 @@ class PinnedBufferPool:
 
 class _Request:
     __slots__ = ("fd", "offset", "nbytes", "buf", "key", "event", "error",
-                 "engine", "token", "abandoned")
+                 "engine", "token", "abandoned", "ready_at")
 
     def __init__(self, engine: "IOEngine", fd: int, offset: int, nbytes: int,
                  buf: PinnedBuffer, key: Optional[str]):
@@ -251,6 +259,7 @@ class _Request:
         self.error: Optional[BaseException] = None
         self.token = 0
         self.abandoned = False
+        self.ready_at = 0.0    # disk-emulation pacing (sim_read_bytes_per_s)
 
     def finish(self, error: Optional[BaseException] = None) -> None:
         self.error = error
@@ -316,10 +325,34 @@ class ReadTicket:
             raise ReadFault(
                 f"async read failed ({self._req.key!r}, "
                 f"{self._req.nbytes}B @ {self._req.offset}): {err}") from err
+        if self._req.ready_at:
+            # edge-disk emulation: the bytes are here, but a slow flash
+            # device would not have served them yet — pace the reap to the
+            # simulated device's shared bandwidth. Sliced: a read already
+            # issued to a real device cannot be recalled, but the EMULATED
+            # remainder of its service time can — an abandoned race-loser
+            # frees its pool slot now instead of sleeping out the device
+            while True:
+                if self._req.abandoned:
+                    raise ReadAbandoned(
+                        f"read {self._req.key!r} abandoned mid-pace")
+                delay = self._req.ready_at - time.monotonic()
+                if delay <= 0:
+                    break
+                time.sleep(min(delay, 0.002))
         return self._req.buf.view(self._req.nbytes)
 
     def release(self) -> None:
         self._req.buf.release()
+
+    def interrupt(self) -> None:
+        """Flag the read abandoned WITHOUT touching its buffer: a waiter
+        parked in the emulated-disk pacing loop raises ``ReadAbandoned``
+        (and its own cleanup releases the buffer); a waiter already past
+        pacing completes normally. Safe to call from another thread —
+        unlike ``abandon()``, this can never recycle a buffer someone is
+        still reading."""
+        self._req.abandoned = True
 
     def abandon(self) -> None:
         """Give up on this read: recycle the buffer now if the request is
@@ -329,6 +362,42 @@ class ReadTicket:
         req.abandoned = True
         if req.event.is_set():
             req.buf.release()
+
+
+class TransferCharge:
+    """One peer-transfer byte charge against the engine's admission budget.
+
+    Peer warm-state fetches (``executor/warmstate.py``) read no local fd,
+    but their payloads still land in pinned pool slabs and still count
+    against ``max_bytes_in_flight`` — the budget is a statement about host
+    memory pressure during prep, not about the disk specifically.  The
+    charge is taken at receive time and held until the payload has been
+    copied out (CRC-checked and materialized), then ``release()`` returns
+    the bytes to the budget and the slab to the pool.  Release is
+    idempotent, mirroring the ticket/abandon contract above, because a
+    lost race may release from both the fetch path and the job-done
+    cleanup."""
+
+    __slots__ = ("engine", "buf", "nbytes", "key", "_released")
+
+    def __init__(self, engine: "IOEngine", buf: PinnedBuffer, nbytes: int,
+                 key: Optional[str]):
+        self.engine = engine
+        self.buf = buf
+        self.nbytes = nbytes
+        self.key = key
+        self._released = False
+
+    def view(self, nbytes: Optional[int] = None) -> np.ndarray:
+        return self.buf.view(self.nbytes if nbytes is None else nbytes)
+
+    def release(self) -> None:
+        with self.engine._cond:
+            if self._released:
+                return
+            self._released = True
+        self.engine._on_transfer_done(self)
+        self.buf.release()
 
 
 # ---------------------------------------------------------------------------
@@ -673,10 +742,19 @@ class IOEngine:
         self._in_flight = 0
         self._bytes_in_flight = 0
         self.max_bytes_in_flight = max_bytes_in_flight
+        # edge-disk emulation: when set, read reaps are paced by a shared
+        # token bucket to this many bytes/s (one simulated device, shared
+        # by every in-flight read — NOT per-request).  CI hosts serve the
+        # store from page cache at memory speed; the paper's subject is
+        # edge flash at ~100-400 MB/s, and benchmarks that depend on disk
+        # time being real (e.g. the warm-transfer race) set this knob.
+        self.sim_read_bytes_per_s: Optional[float] = None
+        self._sim_next_free = 0.0
         self._idle_callbacks: List[Callable[[], None]] = []
         self._closed = False
         self.stats = {"submitted": 0, "reaped": 0, "errors": 0,
                       "bytes_submitted": 0, "bytes_reaped": 0,
+                      "transfer_charges": 0, "transfer_bytes": 0,
                       "budget_waits": 0, "idle_transitions": 0,
                       "probe_rejected": []}
         self.backend = self._probe(forced, depth, aio_workers)
@@ -735,8 +813,15 @@ class IOEngine:
             self._bytes_in_flight += nbytes
             self.stats["submitted"] += 1
             self.stats["bytes_submitted"] += nbytes
+            ready_at = 0.0
+            if self.sim_read_bytes_per_s:
+                start = max(time.monotonic(), self._sim_next_free)
+                self._sim_next_free = (
+                    start + nbytes / self.sim_read_bytes_per_s)
+                ready_at = self._sim_next_free
         buf = self.pool.acquire(nbytes)
         req = _Request(self, fd, offset, nbytes, buf, key)
+        req.ready_at = ready_at
         try:
             self.backend.submit(req)
         except BaseException as e:
@@ -746,6 +831,54 @@ class IOEngine:
                 raise classify(e) from e
             raise
         return ReadTicket(req, injector=injector)
+
+    def charge(self, nbytes: int, *, key: Optional[str] = None,
+               injector=None) -> TransferCharge:
+        """Admit ``nbytes`` of peer-transfer payload.
+
+        Blocks under the same bytes-in-flight budget as :meth:`submit`
+        (with the same oversized-alone escape so the gate can never
+        wedge) and hands back a pool slab for the receive path to fill.
+        Counted under ``transfer_charges``/``transfer_bytes`` — NOT
+        ``bytes_submitted`` — so disk reads and peer transfers stay
+        separately observable (the warm-transfer CI gate depends on
+        this)."""
+        if injector is not None:
+            injector.maybe_fault("ioengine.charge", key)
+        nbytes = int(nbytes)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("IOEngine is closed")
+            budget = self.max_bytes_in_flight
+            if budget is not None:
+                waited = False
+                while (self._bytes_in_flight > 0
+                       and self._bytes_in_flight + nbytes > budget):
+                    waited = True
+                    self._cond.wait()
+                if waited:
+                    self.stats["budget_waits"] += 1
+            self._in_flight += 1
+            self._bytes_in_flight += nbytes
+            self.stats["transfer_charges"] += 1
+            self.stats["transfer_bytes"] += nbytes
+        buf = self.pool.acquire(nbytes)
+        return TransferCharge(self, buf, nbytes, key)
+
+    def _on_transfer_done(self, charge: TransferCharge) -> None:
+        with self._cond:
+            self._in_flight -= 1
+            self._bytes_in_flight -= charge.nbytes
+            idle = self._in_flight == 0
+            if idle:
+                self.stats["idle_transitions"] += 1
+            callbacks = list(self._idle_callbacks) if idle else []
+            self._cond.notify_all()
+        for cb in callbacks:
+            try:
+                cb()
+            except Exception:
+                pass  # idle ticks are advisory; never poison the receiver
 
     def _on_complete(self, req: _Request) -> None:
         with self._cond:
@@ -780,6 +913,14 @@ class IOEngine:
             self.max_bytes_in_flight = budget
             self._cond.notify_all()
 
+    def set_sim_read_bandwidth(self, bytes_per_s: Optional[float]) -> None:
+        """Enable (or disable, with None/0) the edge-disk read-bandwidth
+        emulation; see the ``sim_read_bytes_per_s`` note in ``__init__``."""
+        with self._cond:
+            self.sim_read_bytes_per_s = (
+                float(bytes_per_s) if bytes_per_s else None)
+            self._sim_next_free = 0.0
+
     def add_idle_callback(self, fn: Callable[[], None]) -> None:
         with self._cond:
             self._idle_callbacks.append(fn)
@@ -799,16 +940,16 @@ class IOEngine:
             snap["in_flight"] = self._in_flight
             snap["bytes_in_flight"] = self._bytes_in_flight
             snap["max_bytes_in_flight"] = self.max_bytes_in_flight
+            snap["sim_read_bytes_per_s"] = self.sim_read_bytes_per_s
         snap["pool"] = dict(self.pool.stats)
         return snap
 
     def drain(self, timeout: float = 10.0) -> bool:
         """Wait until nothing is in flight (tests / shutdown barrier)."""
-        import time as _time
-        deadline = _time.monotonic() + timeout
+        deadline = time.monotonic() + timeout
         with self._cond:
             while self._in_flight > 0:
-                left = deadline - _time.monotonic()
+                left = deadline - time.monotonic()
                 if left <= 0:
                     return False
                 self._cond.wait(left)

@@ -61,13 +61,25 @@ class Request:
 
 class BatchedServer:
     def __init__(self, params, cfg: ArchConfig, *, max_batch: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, budget=None):
+        """``budget`` (a ``repro.executor.server.MemoryBudget``, duck-typed
+        ``reserve``/``release``) charges this server's KV-cache allocation
+        to the SAME accounted pool the ColdServer's staged-weight LRU draws
+        from: allocating KV for decode may evict another model's resident
+        weights instead of silently overcommitting device memory.
+        ``close()`` releases the reservation."""
         assert cfg.input_mode == "tokens", "server demo expects token models"
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.state = T.init_decode_state(cfg, max_batch, max_len)
+        self.kv_bytes = sum(int(getattr(x, "nbytes", 0))
+                            for x in jax.tree.leaves(self.state))
+        self.budget = budget
+        self._budget_tag = f"kv:{id(self)}"
+        if budget is not None:
+            budget.reserve(self._budget_tag, self.kv_bytes)
         self.pos = np.zeros(max_batch, np.int64)        # per-slot position
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
@@ -141,6 +153,14 @@ class BatchedServer:
                 self.finished.append(req)
                 self.slot_req[s] = None
         return len(live)
+
+    def close(self):
+        """Release the KV-cache reservation back to the shared budget.
+        Idempotent; the server itself remains usable (the accounting is
+        advisory — correctness never depends on it)."""
+        if self.budget is not None:
+            self.budget.release(self._budget_tag)
+            self.budget = None
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         """Tick until queue and slots are empty; returns every request

@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 _GUARDED_MODULES = {
     "test_faults", "test_crash_recovery", "test_degradation",
     "test_frontdoor", "test_deadlines", "test_cold_server", "test_drift",
+    "test_warmstate",
 }
 _PER_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "180"))
 
